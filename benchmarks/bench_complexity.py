@@ -1,0 +1,46 @@
+"""Fig 5.7 analog: runtime per iteration and memory as #agents grows.
+
+The paper shows linear runtime/space complexity of the engine from 10³ to
+10⁹ agents.  On this CPU container we sweep 10³–3·10⁴ and check the
+per-agent cost stays within a small factor (linear scaling)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import print_table, save_result, timeit
+
+from repro.core import (
+    EngineConfig, ForceParams, brownian_motion, init_state, make_pool,
+    run_jit, spec_for_space, simulation_step,
+)
+import functools
+
+
+def run(fast: bool = True):
+    sizes = [1000, 4000, 16000] if fast else [1000, 4000, 16000, 64000]
+    rows = []
+    per_agent = []
+    for n in sizes:
+        space = float(np.cbrt(n) * 4.0)   # constant density
+        rng = np.random.default_rng(0)
+        pos = rng.uniform(0, space, (n, 3)).astype(np.float32)
+        pool = make_pool(n, jnp.asarray(pos), diameter=1.5)
+        config = EngineConfig(
+            spec=spec_for_space(0.0, space, 2.0, max_per_cell=32),
+            behaviors=(brownian_motion(0.1),),
+            force_params=ForceParams(),
+            dt=0.1, min_bound=0.0, max_bound=space, boundary="closed",
+        )
+        state = init_state(pool, seed=1)
+        step = jax.jit(functools.partial(simulation_step, config))
+        t = timeit(step, state, warmup=1, iters=3)
+        mem_mb = sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(state)) / 1e6
+        rows.append([n, f"{t*1e3:.1f} ms", f"{t/n*1e6:.2f} µs/agent", f"{mem_mb:.1f} MB"])
+        per_agent.append(t / n)
+    print_table("Fig 5.7: runtime vs #agents (constant density)", rows,
+                ["agents", "iter time", "per agent", "state memory"])
+    ratio = per_agent[-1] / per_agent[0]
+    print(f"per-agent cost ratio largest/smallest: {ratio:.2f} (linear ≈ 1)")
+    save_result("complexity", {"sizes": sizes, "per_agent_s": per_agent, "ratio": ratio})
+    return ratio

@@ -1,0 +1,61 @@
+"""Fig 5.13 analog: neighbor-search algorithm comparison.
+
+Paper compares the optimized uniform grid against kd-tree/octree across
+densities.  Here: uniform grid (build + query) vs the brute-force O(N²)
+evaluation, across agent counts — the grid must win asymptotically and its
+build stage must be a small fraction of the query (the paper's O(#agents)
+build claim)."""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import print_table, save_result, timeit
+
+from repro.core import ForceParams, make_pool, spec_for_space
+from repro.core.forces import forces_from_candidates, pair_force
+from repro.core.grid import build_index, candidate_neighbors
+
+
+def _grid_forces(spec, pool, params):
+    index = build_index(spec, pool)
+    cand, mask = candidate_neighbors(spec, index, pool)
+    return forces_from_candidates(pool.position, pool.radius(), cand, mask, params)
+
+
+def _brute_forces(pool, params):
+    n = pool.capacity
+    dx = pool.position[:, None, :] - pool.position[None, :, :]
+    f = pair_force(dx, pool.radius()[:, None], pool.radius()[None, :], params)
+    mask = (~jnp.eye(n, dtype=bool)) & pool.alive[:, None] & pool.alive[None, :]
+    return jnp.sum(jnp.where(mask[..., None], f, 0.0), axis=1)
+
+
+def run(fast: bool = True):
+    sizes = [512, 2048, 8192] if fast else [512, 2048, 8192, 32768]
+    params = ForceParams()
+    rows = []
+    out = {}
+    for n in sizes:
+        space = float(np.cbrt(n) * 4.0)
+        rng = np.random.default_rng(4)
+        pos = rng.uniform(0, space, (n, 3)).astype(np.float32)
+        pool = make_pool(n, jnp.asarray(pos), diameter=1.5)
+        spec = spec_for_space(0.0, space, 2.0, max_per_cell=32)
+
+        t_grid = timeit(jax.jit(functools.partial(_grid_forces, spec, params=params)), pool)
+        t_build = timeit(jax.jit(functools.partial(build_index, spec)), pool)
+        if n <= 8192:
+            t_brute = timeit(jax.jit(functools.partial(_brute_forces, params=params)), pool)
+            brute = f"{t_brute*1e3:.1f} ms"
+            speedup = f"{t_brute/t_grid:.1f}×"
+        else:
+            brute, speedup = "—", "—"
+        rows.append([n, f"{t_grid*1e3:.1f} ms", f"{t_build*1e3:.1f} ms", brute, speedup])
+        out[n] = {"grid": t_grid, "build": t_build}
+    print_table("Fig 5.13: uniform grid vs brute force", rows,
+                ["agents", "grid total", "grid build", "brute O(N²)", "grid speedup"])
+    save_result("neighbor_search", out)
+    return out

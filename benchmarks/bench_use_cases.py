@@ -1,0 +1,83 @@
+"""Table 4.5 analog: performance data for the three published use cases.
+
+Agents / iterations / runtime / state memory for neuroscience-style growth
+(division), oncology (tumor spheroid), and epidemiology (SIR) at CPU-
+feasible scales."""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import print_table, save_result
+
+from repro.core import (
+    INFECTED, SUSCEPTIBLE,
+    EngineConfig, ForceParams, apoptosis, brownian_motion, cell_division,
+    growth, init_state, make_pool, random_movement, run_jit, sir_infection,
+    sir_recovery, spec_for_space,
+)
+
+
+def _mem_mb(state):
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(state)) / 1e6
+
+
+def _run(name, config, state, iters):
+    t0 = time.time()
+    final, _ = run_jit(config, state, iters)
+    jax.block_until_ready(final.pool.position)
+    wall = time.time() - t0
+    return [name, int(final.pool.num_alive()), iters, f"{wall:.1f} s",
+            f"{_mem_mb(final):.0f} MB"], wall
+
+
+def run(fast: bool = True):
+    rows, out = [], {}
+    rng = np.random.default_rng(7)
+
+    # oncology: growth + division from a seed cluster
+    n0, cap = (40, 2048) if fast else (200, 16384)
+    pos = (100 + rng.normal(0, 10, (n0, 3))).astype(np.float32)
+    cfg = EngineConfig(
+        spec=spec_for_space(0.0, 200.0, 18.0, max_per_cell=96),
+        behaviors=(brownian_motion(0.1), growth(60.0, 18.0),
+                   cell_division(0.02, trigger_diameter=17.0),
+                   apoptosis(0.002, min_age=87.0)),
+        force_params=ForceParams(), dt=1.0, min_bound=0.0, max_bound=200.0,
+        boundary="closed",
+    )
+    row, wall = _run("oncology (spheroid)", cfg, init_state(make_pool(cap, jnp.asarray(pos), diameter=14.0), seed=1), 100 if fast else 288)
+    rows.append(row); out["oncology"] = wall
+
+    # epidemiology: SIR
+    n = 2000 if fast else 20000
+    space = 100.0 if fast else 215.0
+    pos = rng.uniform(0, space, (n, 3)).astype(np.float32)
+    kind = np.where(np.arange(n) < n // 100, INFECTED, SUSCEPTIBLE)
+    cfg = EngineConfig(
+        spec=spec_for_space(0.0, space, 4.0, max_per_cell=64),
+        behaviors=(random_movement(4.0), sir_infection(3.24, 0.285), sir_recovery(0.0052)),
+        dt=1.0, min_bound=0.0, max_bound=space, boundary="toroidal",
+    )
+    row, wall = _run("epidemiology (SIR)", cfg, init_state(make_pool(n, jnp.asarray(pos), diameter=0.5, kind=jnp.asarray(kind)), seed=2), 200 if fast else 1000)
+    rows.append(row); out["epidemiology"] = wall
+
+    # neuroscience-style: heavy contact mechanics at high density
+    n = 3000 if fast else 30000
+    space = float(np.cbrt(n) * 2.5)
+    pos = rng.uniform(0, space, (n, 3)).astype(np.float32)
+    cfg = EngineConfig(
+        spec=spec_for_space(0.0, space, 2.0, max_per_cell=64),
+        behaviors=(brownian_motion(0.05),),
+        force_params=ForceParams(), dt=0.1, min_bound=0.0, max_bound=space,
+        boundary="closed", active_capacity=n,
+    )
+    row, wall = _run("mechanics (dense contact)", cfg, init_state(make_pool(n, jnp.asarray(pos), diameter=1.8), seed=3), 100)
+    rows.append(row); out["mechanics"] = wall
+
+    print_table("Table 4.5: use-case performance", rows,
+                ["use case", "agents", "iterations", "runtime", "memory"])
+    save_result("use_cases", out)
+    return out

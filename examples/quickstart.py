@@ -1,0 +1,93 @@
+"""Quickstart: soma clustering (paper §4.7.1, Fig 4.18).
+
+Two cell types, initially mixed.  Each type secretes its own extracellular
+substance and chemotaxes up its own gradient (Algorithms 6–7); clusters of
+same-type cells emerge.  We quantify emergence with a same-type-neighbor
+fraction and require it to rise well above the mixed baseline.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    EngineConfig,
+    ForceParams,
+    build_index,
+    candidate_neighbors,
+    chemotaxis,
+    init_state,
+    make_grid,
+    make_pool,
+    run_jit,
+    secretion,
+    spec_for_space,
+)
+
+
+def same_type_fraction(spec, pool) -> float:
+    """Fraction of neighbor pairs (within the interaction radius) that share
+    a cell type — the clustering observable."""
+    index = build_index(spec, pool)
+    cand, mask = candidate_neighbors(spec, index, pool)
+    safe = jnp.where(mask, cand, 0)
+    nkind = jnp.take(pool.kind, safe, axis=0)
+    npos = jnp.take(pool.position, safe, axis=0)
+    d2 = jnp.sum((pool.position[:, None, :] - npos) ** 2, axis=-1)
+    close = mask & (d2 < 10.0**2)
+    same = close & (nkind == pool.kind[:, None])
+    return float(jnp.sum(same) / jnp.maximum(jnp.sum(close), 1))
+
+
+def main(n_cells=600, steps=300, space=100.0, seed=0):
+    rng = np.random.default_rng(seed)
+    pos = rng.uniform(10, space - 10, (n_cells, 3)).astype(np.float32)
+    kind = (rng.random(n_cells) < 0.5).astype(np.int32)
+    pool = make_pool(n_cells, jnp.asarray(pos), diameter=5.0, kind=jnp.asarray(kind))
+
+    spec = spec_for_space(0.0, space, 10.0, max_per_cell=64)
+    grids = {
+        "substance_0": make_grid(0.0, space, 20, diffusion_coefficient=4.0, decay_constant=0.002),
+        "substance_1": make_grid(0.0, space, 20, diffusion_coefficient=4.0, decay_constant=0.002),
+    }
+    config = EngineConfig(
+        spec=spec,
+        behaviors=(
+            secretion("substance_0", 1.0, kind=0),
+            secretion("substance_1", 1.0, kind=1),
+            chemotaxis("substance_0", 0.75, kind=0),
+            chemotaxis("substance_1", 0.75, kind=1),
+        ),
+        force_params=ForceParams(),
+        dt=1.0,
+        min_bound=0.0,
+        max_bound=space,
+        boundary="closed",
+        diffusion_frequency=1,
+    )
+
+    state = init_state(pool, grids, seed=seed)
+    before = same_type_fraction(spec, state.pool)
+    t0 = time.time()
+    final, _ = run_jit(config, state, steps)
+    jax.block_until_ready(final.pool.position)
+    dt = time.time() - t0
+    after = same_type_fraction(spec, final.pool)
+
+    print(f"soma clustering: {n_cells} cells, {steps} steps in {dt:.1f}s "
+          f"({n_cells*steps/dt:.0f} agent-updates/s)")
+    print(f"same-type neighbor fraction: {before:.3f} → {after:.3f}")
+    assert after > before + 0.15, "clustering did not emerge"
+    print("clusters emerged ✓ (cf. Fig 4.18)")
+    return before, after
+
+
+if __name__ == "__main__":
+    main()

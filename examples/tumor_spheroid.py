@@ -1,0 +1,93 @@
+"""Oncology use case (paper §4.6.2, Fig 4.16): tumor spheroid growth.
+
+MCF-7-style mono-culture: cells grow (volume rate), divide above a trigger
+probability, die stochastically past a minimum age, and random-walk
+(Brownian) — Algorithm 2 with the Table 4.2 parameter structure.  The
+observable is the spheroid diameter over time (from the bounding radius of
+the population), which must grow monotonically and the population must
+expand from its seed, mirroring the in-vitro curves.
+
+Run:  PYTHONPATH=src python examples/tumor_spheroid.py
+"""
+
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    EngineConfig,
+    ForceParams,
+    apoptosis,
+    brownian_motion,
+    cell_division,
+    growth,
+    init_state,
+    make_pool,
+    run_jit,
+    spec_for_space,
+)
+
+
+def spheroid_diameter(pool) -> float:
+    alive = np.asarray(pool.alive)
+    pos = np.asarray(pool.position)[alive]
+    if len(pos) < 2:
+        return 0.0
+    center = pos.mean(axis=0)
+    r95 = np.quantile(np.linalg.norm(pos - center, axis=1), 0.95)
+    return float(2.0 * r95)
+
+
+def main(n_init=60, capacity=4096, steps=240, seed=0):
+    space = 300.0
+    rng = np.random.default_rng(seed)
+    # seed cluster at the center
+    pos = (150.0 + rng.normal(0, 12.0, (n_init, 3))).astype(np.float32)
+    pool = make_pool(capacity, jnp.asarray(pos), diameter=14.0)
+
+    config = EngineConfig(
+        spec=spec_for_space(0.0, space, 18.0, max_per_cell=96),
+        behaviors=(
+            brownian_motion(0.15),                 # Table 4.2 random movement
+            growth(60.0, 18.0),                    # μm³/h to max diameter
+            cell_division(0.02, trigger_diameter=17.0),
+            apoptosis(0.002, min_age=87.0),        # min age to apoptosis [h]
+        ),
+        force_params=ForceParams(),
+        dt=1.0,
+        min_bound=0.0,
+        max_bound=space,
+        boundary="closed",
+        active_capacity=None,
+    )
+
+    state = init_state(pool, seed=seed)
+    d0 = spheroid_diameter(state.pool)
+    n0 = int(state.pool.num_alive())
+
+    diam = []
+    t0 = time.time()
+    for chunk in range(6):
+        state, _ = run_jit(config, state, steps // 6)
+        diam.append(spheroid_diameter(state.pool))
+    wall = time.time() - t0
+
+    n1 = int(state.pool.num_alive())
+    print(f"tumor spheroid: {n0} → {n1} cells over {steps} h "
+          f"({wall:.1f}s wall), overflow={int(state.pool.overflow)}")
+    print("diameter trajectory (μm):",
+          " ".join(f"{d:.0f}" for d in [d0] + diam))
+    assert n1 > 1.5 * n0, "population did not grow"
+    assert diam[-1] > d0 * 1.2, "spheroid did not expand"
+    # growth is roughly monotone (small stochastic dips allowed)
+    assert diam[-1] >= max(diam[:3]) * 0.9
+    print("spheroid growth dynamics reproduced ✓ (cf. Fig 4.16)")
+
+
+if __name__ == "__main__":
+    main()

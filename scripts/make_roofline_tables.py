@@ -1,0 +1,102 @@
+"""Generate the EXPERIMENTS.md §Dry-run / §Roofline tables from
+results/dryrun/*.json.
+
+    python scripts/make_roofline_tables.py [--dir results/dryrun] > tables.md
+"""
+
+import argparse
+import glob
+import json
+import os
+
+
+def fmt_ms(s):
+    if s is None:
+        return "—"
+    if s >= 1.0:
+        return f"{s:.2f} s"
+    return f"{s*1e3:.2f} ms"
+
+
+def fmt_gb(b):
+    return f"{b/1e9:.2f}"
+
+
+def load(dir_):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(dir_, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def dryrun_table(recs, mesh):
+    rows = []
+    for r in recs:
+        if r["mesh"] != mesh:
+            continue
+        if r["status"] == "skipped":
+            rows.append(
+                f"| {r['arch']} | {r['shape']} | SKIP | {r['reason'][:60]}… | | | |"
+            )
+            continue
+        if r["status"] != "ok":
+            rows.append(f"| {r['arch']} | {r['shape']} | **FAIL** | {r.get('error','')[:60]} | | | |")
+            continue
+        m = r["memory"]
+        rows.append(
+            "| {arch} | {shape} | ok | {kind} | {compile:.0f}s | {peak:.2f} GB | {coll:.2f} GB |".format(
+                arch=r["arch"], shape=r["shape"], kind=r.get("kind", ""),
+                compile=r.get("compile_s", 0),
+                peak=m["peak_estimate_bytes"] / 1e9,
+                coll=r["collective_bytes_per_device"]["total"] / 1e9,
+            )
+        )
+    header = (
+        "| arch | shape | status | kind | compile | peak HBM/dev | coll bytes/dev |\n"
+        "|---|---|---|---|---|---|---|"
+    )
+    return header + "\n" + "\n".join(rows)
+
+
+def roofline_table(recs, mesh="single"):
+    rows = []
+    for r in recs:
+        if r["mesh"] != mesh or r["status"] != "ok" or r["arch"] == "teraagent":
+            continue
+        rf = r["roofline"]
+        dom = rf["dominant"].replace("_s", "")
+        useful = r.get("useful_flops_fraction", 0.0)
+        rows.append(
+            "| {arch} | {shape} | {c} | {m} | {mf} | {coll} | **{dom}** | {model:.1f} | {useful:.2f} |".format(
+                arch=r["arch"], shape=r["shape"],
+                c=fmt_ms(rf["compute_s"]), m=fmt_ms(rf["memory_s"]),
+                mf=fmt_ms(rf.get("memory_s_fused_est")),
+                coll=fmt_ms(rf["collective_s"]), dom=dom,
+                model=r.get("model_flops_per_device", 0) / 1e12,
+                useful=useful,
+            )
+        )
+    header = (
+        "| arch | shape | compute | memory (HLO) | memory (fused est.) | collective | dominant | MODEL TF/dev | MODEL/HLO flops |\n"
+        "|---|---|---|---|---|---|---|---|---|"
+    )
+    return header + "\n" + "\n".join(rows)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results/dryrun")
+    args = ap.parse_args()
+    recs = load(args.dir)
+
+    print("### §Dry-run — single-pod mesh (16×16 = 256 chips)\n")
+    print(dryrun_table(recs, "single"))
+    print("\n### §Dry-run — multi-pod mesh (2×16×16 = 512 chips)\n")
+    print(dryrun_table(recs, "multi"))
+    print("\n### §Roofline — per-cell terms (single-pod, per device)\n")
+    print(roofline_table(recs, "single"))
+
+
+if __name__ == "__main__":
+    main()

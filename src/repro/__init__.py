@@ -1,0 +1,14 @@
+"""TeraAgent-JAX: extreme-scale agent-based simulation (BioDynaMo/TeraAgent
+reproduction) + multi-pod LM training/serving framework on JAX/Pallas.
+
+Subpackages:
+  core        — the paper's contribution: the ABM engine + TeraAgent
+  models      — the assigned LM architecture zoo
+  kernels     — Pallas TPU kernels (pairwise_force, diffusion3d,
+                flash_attention, rmsnorm)
+  configs     — --arch registry + shape specs
+  launch      — mesh / dryrun / train / serve / elastic
+  optim, data, checkpoint, sharding, training — substrates
+"""
+
+__version__ = "1.0.0"

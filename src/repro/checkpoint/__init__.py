@@ -1,0 +1,1 @@
+from .checkpoint import latest_step, list_steps, restore, save  # noqa: F401

@@ -1,0 +1,89 @@
+"""Assigned input shapes and ShapeDtypeStruct input specs for the dry-run.
+
+Shapes (LM transformers: seq_len × global_batch):
+  train_4k     seq 4'096,   batch 256   → train_step
+  prefill_32k  seq 32'768,  batch 32    → serve prefill (forward, last logits)
+  decode_32k   seq 32'768,  batch 128   → serve_step: 1 token, seq-long cache
+  long_500k    seq 524'288, batch 1     → serve_step; sub-quadratic archs only
+
+``input_specs`` returns weak-type-correct, shardable ShapeDtypeStructs for
+every model input (no allocation) — the dry-run lowers against these.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .base import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524_288, 1, "decode"),
+}
+
+
+def shape_applicable(cfg: ModelConfig, shape: ShapeSpec) -> tuple[bool, str]:
+    """(runnable, reason) per the sub-quadratic rule (DESIGN.md §4)."""
+    if shape.name == "long_500k" and not cfg.supports_long_context:
+        return False, "pure full-attention arch: 500k dense-KV decode is the quadratic regime this shape excludes"
+    return True, ""
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStructs for the batch of one step of this (arch × shape)."""
+    b, t = shape.global_batch, shape.seq_len
+    cd = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+    if shape.kind == "train":
+        batch = {
+            "tokens": _sds((b, t), jnp.int32),
+            "targets": _sds((b, t), jnp.int32),
+        }
+        if cfg.is_encoder_decoder:
+            batch["frames"] = _sds((b, cfg.encoder_seq, cfg.d_model), cd)
+        if cfg.family == "vlm":
+            batch["patches"] = _sds((b, cfg.prefix_tokens, cfg.d_model), cd)
+        return batch
+
+    if shape.kind == "prefill":
+        batch = {"tokens": _sds((b, t), jnp.int32)}
+        if cfg.is_encoder_decoder:
+            batch["frames"] = _sds((b, cfg.encoder_seq, cfg.d_model), cd)
+        if cfg.family == "vlm":
+            batch["patches"] = _sds((b, cfg.prefix_tokens, cfg.d_model), cd)
+        return batch
+
+    # decode: one new token against a seq_len-deep cache/state
+    return {
+        "tokens": _sds((b, 1), jnp.int32),
+        "pos": _sds((), jnp.int32),
+    }
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict:
+    """ShapeDtypeStructs for the decode cache at context depth seq_len."""
+    from repro.models.model import build_model
+
+    model = build_model(cfg)
+    return jax.eval_shape(
+        lambda: model.init_cache(shape.global_batch, shape.seq_len)
+    )

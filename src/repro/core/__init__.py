@@ -1,0 +1,64 @@
+"""repro.core — the paper's contribution: an agent-based simulation engine.
+
+Layer map (DESIGN.md §3):
+  agents       SoA agent pools, parallel add/remove (§5.3.2)
+  morton       space-filling-curve utilities (§5.4.2)
+  grid         uniform-grid neighbor index (§5.3.1)
+  forces       mechanical contact forces + static omission (§4.5.1, §5.5)
+  diffusion    extracellular diffusion, Eq 4.3 (§4.5.2)
+  behaviors    the published behavior library (App. D)
+  engine       Algorithm 8 as a pure lax.scan step
+  delta        delta encoding + quantization codecs (§6.2.3)
+  distributed  TeraAgent: domain decomposition + halo exchange (§6.2)
+"""
+
+from .agents import AgentPool, add_agents, compact, make_pool, permute, remove_agents
+from .behaviors import (
+    INFECTED,
+    RECOVERED,
+    SUSCEPTIBLE,
+    StepContext,
+    apoptosis,
+    brownian_motion,
+    cell_division,
+    chemotaxis,
+    growth,
+    random_movement,
+    secretion,
+    sir_infection,
+    sir_recovery,
+)
+from .diffusion import (
+    DiffusionGrid,
+    analytical_point_source,
+    concentration_at,
+    diffuse,
+    gradient_at,
+    increase_concentration,
+    make_grid,
+)
+from .engine import (
+    EngineConfig,
+    SimulationState,
+    count_kinds,
+    init_state,
+    run,
+    run_jit,
+    simulation_step,
+)
+from .forces import ForceParams, mechanical_forces, pair_force
+from .grid import GridIndex, GridSpec, build_index, candidate_neighbors, sort_agents, spec_for_space
+
+__all__ = [
+    "AgentPool", "add_agents", "compact", "make_pool", "permute", "remove_agents",
+    "StepContext", "apoptosis", "brownian_motion", "cell_division", "chemotaxis",
+    "growth", "random_movement", "secretion", "sir_infection", "sir_recovery",
+    "SUSCEPTIBLE", "INFECTED", "RECOVERED",
+    "DiffusionGrid", "analytical_point_source", "concentration_at", "diffuse",
+    "gradient_at", "increase_concentration", "make_grid",
+    "EngineConfig", "SimulationState", "count_kinds", "init_state", "run",
+    "run_jit", "simulation_step",
+    "ForceParams", "mechanical_forces", "pair_force",
+    "GridIndex", "GridSpec", "build_index", "candidate_neighbors", "sort_agents",
+    "spec_for_space",
+]

@@ -1,0 +1,273 @@
+"""Agent behaviors (§4.2.1, Appendix D).
+
+A *behavior* is a pure function ``(ctx, pool) -> (ctx, pool)`` executed for
+all agents each iteration (vectorized — the engine's agent-op loop of
+Algorithm 8 L7–11 becomes array ops).  Behaviors may read the environment
+(neighbor candidates, diffusion grids) through :class:`StepContext`, move or
+mutate agents, secrete into grids, and request reproduction/removal.
+
+Semantics follow BioDynaMo's *copy execution context* defaults (§5.2.1 /
+§4.4.2): agents created or removed in iteration *i* become visible to
+neighbor queries in iteration *i+1* (the candidate index is built once at the
+start of the step).
+
+The closures below reproduce the paper's published behavior set: Brownian
+motion / random movement (Algorithm 5), secretion (Algorithm 6), chemotaxis
+(Algorithm 7), growth + division (Algorithm 2), infection (Algorithm 3),
+recovery (Algorithm 4), and apoptosis (Algorithm 2 L4–7).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import diffusion as dgrid
+from .agents import AgentPool, add_agents, remove_agents
+from .grid import GridIndex, GridSpec
+
+Array = jax.Array
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class StepContext:
+    """Per-iteration environment handed to each behavior."""
+
+    rng: Array
+    grids: Dict[str, dgrid.DiffusionGrid]
+    cand: Array        # (C, K) neighbor candidate ids into the *source* arrays
+    cand_mask: Array   # (C, K)
+    # Source arrays the candidate ids index into.  In the single-node engine
+    # these are the pool's own arrays; in the distributed engine they are the
+    # ghost-extended (local + halo) arrays (§6.2.1).
+    src_position: Array
+    src_kind: Array
+    dt: Array          # scalar f32
+    step: Array        # scalar i32
+    min_bound: float = dataclasses.field(metadata=dict(static=True))
+    max_bound: float = dataclasses.field(metadata=dict(static=True))
+
+    def next_rng(self) -> Tuple["StepContext", Array]:
+        k1, k2 = jax.random.split(self.rng)
+        return dataclasses.replace(self, rng=k1), k2
+
+    def with_grid(self, name: str, grid: dgrid.DiffusionGrid) -> "StepContext":
+        grids = dict(self.grids)
+        grids[name] = grid
+        return dataclasses.replace(self, grids=grids)
+
+
+Behavior = Callable[[StepContext, AgentPool], Tuple[StepContext, AgentPool]]
+
+
+def _kind_mask(pool: AgentPool, kind: Optional[int]) -> Array:
+    if kind is None:
+        return pool.alive
+    return pool.alive & (pool.kind == kind)
+
+
+# ------------------------------------------------------------------ motion
+
+def brownian_motion(rate: float, kind: Optional[int] = None) -> Behavior:
+    """Tumor-spheroid random migration (Algorithm 2 L1–3): unit random
+    direction scaled by the displacement rate."""
+
+    def run(ctx: StepContext, pool: AgentPool):
+        ctx, key = ctx.next_rng()
+        vec = jax.random.normal(key, pool.position.shape)
+        norm = jnp.linalg.norm(vec, axis=-1, keepdims=True)
+        step = vec / jnp.maximum(norm, 1e-12) * rate
+        mask = _kind_mask(pool, kind)
+        return ctx, pool.replace(
+            position=pool.position + jnp.where(mask[:, None], step, 0.0)
+        )
+
+    return run
+
+
+def random_movement(max_step: float, kind: Optional[int] = None) -> Behavior:
+    """SIR random movement (Algorithm 5): uniform vector with clamped length."""
+
+    def run(ctx: StepContext, pool: AgentPool):
+        ctx, key = ctx.next_rng()
+        vec = jax.random.uniform(
+            key, pool.position.shape, minval=-1.0, maxval=1.0
+        )
+        norm = jnp.linalg.norm(vec, axis=-1, keepdims=True)
+        step = vec / jnp.maximum(norm, 1e-12) * max_step
+        mask = _kind_mask(pool, kind)
+        return ctx, pool.replace(
+            position=pool.position + jnp.where(mask[:, None], step, 0.0)
+        )
+
+    return run
+
+
+def chemotaxis(grid_name: str, weight: float, kind: Optional[int] = None) -> Behavior:
+    """Algorithm 7: move along the normalized substance gradient."""
+
+    def run(ctx: StepContext, pool: AgentPool):
+        g = dgrid.gradient_at(ctx.grids[grid_name], pool.position, normalized=True)
+        mask = _kind_mask(pool, kind)
+        return ctx, pool.replace(
+            position=pool.position + jnp.where(mask[:, None], g * weight, 0.0)
+        )
+
+    return run
+
+
+# --------------------------------------------------------------- substances
+
+def secretion(grid_name: str, quantity: float, kind: Optional[int] = None) -> Behavior:
+    """Algorithm 6: scatter-add substance at agent positions."""
+
+    def run(ctx: StepContext, pool: AgentPool):
+        mask = _kind_mask(pool, kind)
+        grid = dgrid.increase_concentration(
+            ctx.grids[grid_name], pool.position, quantity, mask=mask
+        )
+        return ctx.with_grid(grid_name, grid), pool
+
+    return run
+
+
+# ------------------------------------------------------- growth / division
+
+def growth(rate: float, max_diameter: float, kind: Optional[int] = None) -> Behavior:
+    """Algorithm 2 L9–10: volumetric growth until max diameter.
+
+    ``rate`` is a volume increase per unit time (μm³/h in the paper)."""
+
+    def run(ctx: StepContext, pool: AgentPool):
+        d = pool.diameter
+        vol = jnp.pi / 6.0 * d**3
+        new_vol = vol + rate * ctx.dt
+        new_d = jnp.cbrt(6.0 * new_vol / jnp.pi)
+        mask = _kind_mask(pool, kind) & (d < max_diameter)
+        return ctx, pool.replace(
+            diameter=jnp.where(mask, jnp.minimum(new_d, max_diameter), d)
+        )
+
+    return run
+
+
+def cell_division(
+    division_probability: float,
+    trigger_diameter: Optional[float] = None,
+    kind: Optional[int] = None,
+    volume_split: float = 0.5,
+    separation: float = 0.5,
+) -> Behavior:
+    """Algorithm 2 L11–12 / cell-growth benchmark: divide into two daughters.
+
+    The mother keeps ``volume_split`` of the volume; the daughter appears at a
+    random direction at ``separation``·radius distance.  New agents become
+    visible next iteration (§4.4.2)."""
+
+    def run(ctx: StepContext, pool: AgentPool):
+        ctx, key = ctx.next_rng()
+        k_prob, k_dir = jax.random.split(key)
+        u = jax.random.uniform(k_prob, (pool.capacity,))
+        mask = _kind_mask(pool, kind) & (u < division_probability)
+        if trigger_diameter is not None:
+            mask = mask & (pool.diameter >= trigger_diameter)
+
+        vol = jnp.pi / 6.0 * pool.diameter**3
+        d_mother = jnp.cbrt(6.0 * vol * volume_split / jnp.pi)
+        d_child = jnp.cbrt(6.0 * vol * (1.0 - volume_split) / jnp.pi)
+
+        direction = jax.random.normal(k_dir, pool.position.shape)
+        direction = direction / jnp.maximum(
+            jnp.linalg.norm(direction, axis=-1, keepdims=True), 1e-12
+        )
+        child_pos = (
+            pool.position + direction * (separation * 0.5 * pool.diameter)[:, None]
+        )
+
+        pool = pool.replace(
+            diameter=jnp.where(mask, d_mother, pool.diameter)
+        )
+        pool = add_agents(
+            pool,
+            spawn_mask=mask,
+            position=child_pos,
+            diameter=d_child,
+            kind=pool.kind,
+        )
+        return ctx, pool
+
+    return run
+
+
+def apoptosis(
+    death_probability: float, min_age: float = 0.0, kind: Optional[int] = None
+) -> Behavior:
+    """Algorithm 2 L4–7: stochastic death after a minimum age."""
+
+    def run(ctx: StepContext, pool: AgentPool):
+        ctx, key = ctx.next_rng()
+        u = jax.random.uniform(key, (pool.capacity,))
+        mask = (
+            _kind_mask(pool, kind)
+            & (pool.age >= min_age)
+            & (u < death_probability)
+        )
+        return ctx, remove_agents(pool, mask)
+
+    return run
+
+
+# ---------------------------------------------------------------- SIR model
+
+SUSCEPTIBLE, INFECTED, RECOVERED = 0, 1, 2
+
+
+def sir_infection(infection_radius: float, infection_probability: float) -> Behavior:
+    """Algorithm 3, in the pull formulation the paper recommends (§2.1.1):
+    a susceptible agent infects *itself* when an infected agent is within the
+    infection radius — no neighbor writes, hence no synchronization."""
+
+    def run(ctx: StepContext, pool: AgentPool):
+        ctx, key = ctx.next_rng()
+        u = jax.random.uniform(key, (pool.capacity,))
+        safe = jnp.where(ctx.cand_mask, ctx.cand, 0)
+        n_pos = jnp.take(ctx.src_position, safe, axis=0)       # (C,K,3)
+        n_kind = jnp.take(ctx.src_kind, safe, axis=0)          # (C,K)
+        dist2 = jnp.sum((pool.position[:, None, :] - n_pos) ** 2, axis=-1)
+        close_infected = (
+            ctx.cand_mask
+            & (n_kind == INFECTED)
+            & (dist2 <= infection_radius**2)
+        )
+        exposed = jnp.any(close_infected, axis=1)
+        becomes = (
+            pool.alive
+            & (pool.kind == SUSCEPTIBLE)
+            & exposed
+            & (u < infection_probability)
+        )
+        return ctx, pool.replace(
+            kind=jnp.where(becomes, INFECTED, pool.kind)
+        )
+
+    return run
+
+
+def sir_recovery(recovery_probability: float) -> Behavior:
+    """Algorithm 4: infected → recovered with fixed probability per step."""
+
+    def run(ctx: StepContext, pool: AgentPool):
+        ctx, key = ctx.next_rng()
+        u = jax.random.uniform(key, (pool.capacity,))
+        becomes = (
+            pool.alive & (pool.kind == INFECTED) & (u < recovery_probability)
+        )
+        return ctx, pool.replace(
+            kind=jnp.where(becomes, RECOVERED, pool.kind)
+        )
+
+    return run

@@ -1,0 +1,117 @@
+"""Delta encoding + quantization codecs (§6.2.3 data-transfer minimization).
+
+TeraAgent reduces aura (halo) transfer volume by sending the *difference*
+between an attribute's value in iteration *i* and *i−1*, then entropy-coding
+it (zstd) — exploiting that agent-based simulations are iterative and most
+attributes change slowly.  Reported reduction: up to 3.5×.
+
+TPU adaptation: collectives require static shapes, so variable-length entropy
+coding is out.  We keep the delta part and replace the entropy coder with
+fixed-rate *quantization*:
+
+    payload_i  = round((x_i − ref_{i−1}) / scale)   (int8 or int16)
+    ref_i      = ref_{i−1} + payload_i · scale       (identically on both ends)
+
+The sender keeps ``ref`` — the receiver's exact reconstruction — so the
+quantization error is *fed back*: it never accumulates, and for a slot whose
+value is static the reconstruction converges to within scale/2 in one step.
+int16 with scale = extent/2¹⁵ is lossless-in-effect for bounded coordinates
+(2× wire reduction vs f32); int8 is 4× with bounded error (tested with
+hypothesis in tests/test_delta.py).
+
+The same codec compresses DP gradient traffic in `repro.optim.compression`
+(beyond-paper application of the same insight).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+_INT_INFO = {
+    jnp.int8.dtype: 127,
+    jnp.int16.dtype: 32767,
+    jnp.int32.dtype: 2**31 - 1,
+}
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class DeltaCodec:
+    """Stateful delta codec over a fixed-shape f32 buffer.
+
+    ref:   (…,) f32 — receiver-side reconstruction (shared by construction).
+    scale: ()   f32 — quantization step.
+    """
+
+    ref: Array
+    scale: Array
+
+    @staticmethod
+    def create(shape: Tuple[int, ...], scale: float, dtype=jnp.float32) -> "DeltaCodec":
+        return DeltaCodec(
+            ref=jnp.zeros(shape, dtype), scale=jnp.asarray(scale, jnp.float32)
+        )
+
+
+def encode(
+    codec: DeltaCodec, x: Array, wire_dtype=jnp.int16, scale: Array | None = None
+) -> Tuple[Array, DeltaCodec]:
+    """Quantize the delta to ``wire_dtype``; returns (payload, codec').
+
+    ``scale`` optionally overrides the stored scale and may be per-slot
+    (broadcastable) — used for two-scale coding of fresh vs. stale slots,
+    which keeps int8 payloads in range when a slot's occupant changes."""
+    s = codec.scale if scale is None else scale
+    qmax = _INT_INFO[jnp.dtype(wire_dtype)]
+    delta = (x - codec.ref) / s
+    q = jnp.clip(jnp.round(delta), -qmax, qmax).astype(wire_dtype)
+    new_ref = codec.ref + q.astype(jnp.float32) * s
+    return q, dataclasses.replace(codec, ref=new_ref)
+
+
+def decode(
+    codec: DeltaCodec, payload: Array, scale: Array | None = None
+) -> Tuple[Array, DeltaCodec]:
+    """Receiver side: reconstruct and advance the reference."""
+    s = codec.scale if scale is None else scale
+    x = codec.ref + payload.astype(jnp.float32) * s
+    return x, dataclasses.replace(codec, ref=x)
+
+
+def reset_slots(codec: DeltaCodec, mask: Array) -> DeltaCodec:
+    """Zero the reference where ``mask`` — used when a buffer slot's occupant
+    changes (the paper re-sends a full record for new agents)."""
+    ref = jnp.where(jnp.broadcast_to(mask, codec.ref.shape), 0.0, codec.ref)
+    return dataclasses.replace(codec, ref=ref)
+
+
+def wire_bytes(payload: Array) -> int:
+    """Bytes this payload puts on the interconnect (static)."""
+    return int(payload.size) * payload.dtype.itemsize
+
+
+def roundtrip_error_bound(codec: DeltaCodec) -> float:
+    """|x − decode(encode(x))| ≤ scale/2 whenever the delta is in range."""
+    return float(codec.scale) * 0.5
+
+
+# ---------------------------------------------------------------------------
+# Stateless helpers used by the gradient-compression path.
+# ---------------------------------------------------------------------------
+
+def quantize_symmetric(x: Array, wire_dtype=jnp.int8) -> Tuple[Array, Array]:
+    """Per-tensor symmetric quantization: returns (q, scale)."""
+    qmax = _INT_INFO[jnp.dtype(wire_dtype)]
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / qmax
+    q = jnp.clip(jnp.round(x / scale), -qmax, qmax).astype(wire_dtype)
+    return q, scale
+
+
+def dequantize(q: Array, scale: Array) -> Array:
+    return q.astype(jnp.float32) * scale

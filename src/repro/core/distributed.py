@@ -1,0 +1,668 @@
+"""TeraAgent: the distributed simulation engine (Chapter 6).
+
+One simulation is spatially decomposed over the device mesh: every device
+owns a box-shaped subdomain and the agents inside it (Fig 6.1).  Each
+iteration requires two kinds of neighbor-device communication:
+
+  1. **migration** — agents whose position left the local box move to the
+     owning neighbor (full agent record);
+  2. **aura / halo exchange** — read-only copies of agents within one
+     interaction radius of a face, so local force/behavior evaluation sees
+     the complete neighborhood (§6.2.1).
+
+The paper identifies (2) as the scaling bottleneck and attacks it with a
+tailored serialization mechanism (§6.2.2) and delta encoding (§6.2.3).  The
+TPU adaptation (DESIGN.md §2):
+
+  * MPI send/recv        → ``jax.lax.ppermute`` rings along mesh axes.  A
+    two/three-phase exchange (x, then y including x-halos, then z including
+    both) covers corner neighbors exactly as dimension-ordered routing does.
+  * tailored serialization → *attribute subsetting*: the halo buffer carries
+    only (position, diameter, kind) — the attributes remote force/behavior
+    evaluation actually reads — never the full agent record.  SoA arrays are
+    already contiguous, so "packing" is a fixed-capacity compaction gather.
+  * delta encoding + zstd → quantized delta codec (`core.delta`): positions
+    go on the wire as int16/int8 deltas against the receiver's reconstruction,
+    with per-slot freshness bits handling occupancy changes.  Wire bytes for
+    positions drop 2×/4×; correctness is bounded by the quantization step
+    (tests/test_distributed.py checks physics parity vs. the single-node
+    engine).
+
+All static shapes: halo/migration buffers have fixed capacities and overflow
+*counters* (never UB).  Coordinates are stored in the device-local frame so
+the whole step is a single SPMD program; the global space is a torus (the
+paper's §4.4.11 toroidal boundary).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import delta as dcodec
+from . import diffusion as dgrid
+from .agents import AgentPool, make_pool, remove_agents
+from .behaviors import StepContext
+from .engine import EngineConfig
+from .forces import forces_from_candidates, forces_from_candidates_tiled, mechanical_forces
+from .grid import (
+    GridIndex,
+    GridSpec,
+    build_index_arrays,
+    candidate_neighbors_arrays,
+    sort_agents,
+)
+
+try:  # JAX >= 0.6
+    from jax import shard_map as _shard_map
+
+    def shard_map(f, mesh, in_specs, out_specs):
+        return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs)
+except ImportError:  # pragma: no cover
+    from jax.experimental.shard_map import shard_map as _legacy_shard_map
+
+    def shard_map(f, mesh, in_specs, out_specs):
+        return _legacy_shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs)
+
+from jax.sharding import PartitionSpec as P
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Configuration
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class DomainConfig:
+    """Static spatial-decomposition description.
+
+    mesh_axes:   mesh axis names decomposing space, in (x, y[, z]) order —
+                 e.g. ``("data", "model")`` single-pod, ``("data", "model",
+                 "pod")`` multi-pod (pod decomposes z).
+    axis_sizes:  mesh extent along each of those axes.
+    extent:      local subdomain edge length along each decomposed dim.
+    depth:       edge length of non-decomposed dims (2D decomposition only).
+    halo_width:  aura width == interaction radius.
+    halo_capacity / migrate_capacity: per-direction buffer bounds.
+    halo_codec:  "none" (f32 wire) | "int16" | "int8" (§6.2.3 delta codec).
+    """
+
+    mesh_axes: Tuple[str, ...]
+    axis_sizes: Tuple[int, ...]
+    extent: float
+    halo_width: float
+    halo_capacity: int
+    migrate_capacity: int
+    depth: float = 0.0
+    halo_codec: str = "int16"
+
+    @property
+    def n_decomposed(self) -> int:
+        return len(self.mesh_axes)
+
+    @property
+    def n_devices(self) -> int:
+        return int(np.prod(self.axis_sizes))
+
+    def local_extent(self, dim: int) -> float:
+        return self.extent if dim < self.n_decomposed else self.depth
+
+    def ghost_capacity(self, pool_capacity: int) -> int:
+        return pool_capacity + 2 * self.n_decomposed * self.halo_capacity
+
+    def grid_spec(self, box_size: float, max_per_cell: int) -> GridSpec:
+        """Grid over the halo-extended local domain."""
+        origin = []
+        dims = []
+        for d in range(3):
+            lo = -self.halo_width if d < self.n_decomposed else 0.0
+            hi = self.local_extent(d) + (
+                self.halo_width if d < self.n_decomposed else 0.0
+            )
+            origin.append(lo)
+            dims.append(max(int(math.ceil((hi - lo) / box_size)), 1))
+        return GridSpec(
+            origin=tuple(origin),
+            box_size=box_size,
+            dims=tuple(dims),
+            max_per_cell=max_per_cell,
+        )
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class HaloCodecState:
+    """Per-device delta-codec state for all (dim, direction) halo channels.
+
+    send_ref / recv_ref: (D, 2, H, 3) f32 — receiver reconstructions.
+    prev_ids:            (D, 2, H) i32 — previous slot occupants (freshness).
+    """
+
+    send_ref: Array
+    recv_ref: Array
+    prev_ids: Array
+    scale: Array  # () f32
+
+    @staticmethod
+    def create(n_dims: int, capacity: int, scale: float) -> "HaloCodecState":
+        return HaloCodecState(
+            send_ref=jnp.zeros((n_dims, 2, capacity, 3), jnp.float32),
+            recv_ref=jnp.zeros((n_dims, 2, capacity, 3), jnp.float32),
+            prev_ids=jnp.full((n_dims, 2, capacity), -1, jnp.int32),
+            scale=jnp.asarray(scale, jnp.float32),
+        )
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class DistState:
+    """Per-device simulation state (stacked on a leading device axis)."""
+
+    pool: AgentPool
+    grids: Dict[str, dgrid.DiffusionGrid]
+    codec: HaloCodecState
+    rng: Array                # (2,) uint32 key data
+    step: Array               # () i32
+    migrate_overflow: Array   # () i32
+    halo_overflow: Array      # () i32
+
+
+# ---------------------------------------------------------------------------
+# Packing helpers (the "tailored serialization", §6.2.2)
+# ---------------------------------------------------------------------------
+
+
+def _select(mask: Array, capacity: int) -> Tuple[Array, Array, Array]:
+    """Deterministic compaction of up to ``capacity`` set indices.
+
+    Returns (ids (cap,), valid (cap,), overflow ())."""
+    n = jnp.sum(mask.astype(jnp.int32))
+    order = jnp.argsort(~mask, stable=True)
+    ids = order[:capacity].astype(jnp.int32)
+    valid = jnp.arange(capacity) < jnp.minimum(n, capacity)
+    overflow = jnp.maximum(n - capacity, 0)
+    return ids, valid, overflow
+
+
+def _shift(x, axis_name: str, axis_size: int, direction: int):
+    """ppermute ring shift: each device receives from its ``-direction``
+    neighbor (direction=+1: data flows east/up along the ring)."""
+    perm = [(i, (i + direction) % axis_size) for i in range(axis_size)]
+    return jax.lax.ppermute(x, axis_name, perm)
+
+
+# ---------------------------------------------------------------------------
+# Migration (§6.2.1 repartitioning)
+# ---------------------------------------------------------------------------
+
+
+def _insert_records(pool: AgentPool, rec: Dict[str, Array], valid: Array) -> AgentPool:
+    """Insert up to R received agent records into free pool slots."""
+    c = pool.capacity
+    r = valid.shape[0]
+    free = ~pool.alive
+    n_free = jnp.sum(free.astype(jnp.int32))
+    slot_ids = jnp.where(free, jnp.arange(c), c)
+    free_slots = jnp.sort(slot_ids)
+    rank = jnp.cumsum(valid.astype(jnp.int32)) - 1
+    fits = valid & (rank < n_free)
+    target = jnp.where(fits, free_slots[jnp.clip(rank, 0, c - 1)], c)
+
+    pool = pool.replace(
+        position=pool.position.at[target].set(rec["position"], mode="drop"),
+        diameter=pool.diameter.at[target].set(rec["diameter"], mode="drop"),
+        kind=pool.kind.at[target].set(rec["kind"], mode="drop"),
+        age=pool.age.at[target].set(rec["age"], mode="drop"),
+        alive=pool.alive.at[target].set(True, mode="drop"),
+        static=pool.static.at[target].set(False, mode="drop"),
+        attrs={
+            k: v.at[target].set(rec["attrs"][k], mode="drop")
+            for k, v in pool.attrs.items()
+        },
+        overflow=pool.overflow
+        + jnp.maximum(jnp.sum(valid.astype(jnp.int32)) - n_free, 0),
+    )
+    return pool
+
+
+def _pack_records(pool: AgentPool, ids: Array, valid: Array) -> Dict[str, Array]:
+    take = lambda x: jnp.take(x, ids, axis=0)
+    return dict(
+        position=take(pool.position),
+        diameter=jnp.where(valid, take(pool.diameter), 0.0),
+        kind=jnp.where(valid, take(pool.kind), 0),
+        age=jnp.where(valid, take(pool.age), 0.0),
+        attrs={k: take(v) for k, v in pool.attrs.items()},
+    )
+
+
+def migrate(dcfg: DomainConfig, pool: AgentPool) -> Tuple[AgentPool, Array]:
+    """Dimension-ordered migration of agents that left the local box."""
+    overflow = jnp.zeros((), jnp.int32)
+    for d in range(dcfg.n_decomposed):
+        axis = dcfg.mesh_axes[d]
+        size = dcfg.axis_sizes[d]
+        ext = dcfg.extent
+        coord = pool.position[:, d]
+        east = pool.alive & (coord >= ext)
+        west = pool.alive & (coord < 0.0)
+
+        ids_e, val_e, ovf_e = _select(east, dcfg.migrate_capacity)
+        ids_w, val_w, ovf_w = _select(west, dcfg.migrate_capacity)
+        overflow = overflow + ovf_e + ovf_w
+
+        rec_e = _pack_records(pool, ids_e, val_e)
+        rec_w = _pack_records(pool, ids_w, val_w)
+        # Rebase into the receiving device's frame (torus).
+        rec_e["position"] = rec_e["position"].at[:, d].add(-ext)
+        rec_w["position"] = rec_w["position"].at[:, d].add(ext)
+
+        # Remove exactly the packed agents (invalid slots scatter out of range).
+        c = pool.capacity
+        sent_mask = jnp.zeros((c,), bool)
+        sent_mask = sent_mask.at[jnp.where(val_e, ids_e, c)].set(True, mode="drop")
+        sent_mask = sent_mask.at[jnp.where(val_w, ids_w, c)].set(True, mode="drop")
+        pool = remove_agents(pool, sent_mask)
+
+        # Ring exchange: east-bound records shift +1; west-bound shift −1.
+        got_from_west = jax.tree.map(lambda x: _shift(x, axis, size, +1), rec_e)
+        got_w_valid = _shift(val_e, axis, size, +1)
+        got_from_east = jax.tree.map(lambda x: _shift(x, axis, size, -1), rec_w)
+        got_e_valid = _shift(val_w, axis, size, -1)
+
+        pool = _insert_records(pool, got_from_west, got_w_valid)
+        pool = _insert_records(pool, got_from_east, got_e_valid)
+    return pool, overflow
+
+
+# ---------------------------------------------------------------------------
+# Aura / halo exchange (§6.2.2 + §6.2.3)
+# ---------------------------------------------------------------------------
+
+
+def _slot_scales(
+    dcfg: "DomainConfig", codec: HaloCodecState, fresh: Array, wire_dtype
+) -> Array:
+    """Two-scale coding: stale slots use the fine scale, fresh slots (new
+    occupant, ref reset to 0) a coarse scale whose int range spans the whole
+    halo-extended domain.  int16's fine scale already spans it, so only int8
+    needs the coarse escape."""
+    if jnp.dtype(wire_dtype) == jnp.dtype(jnp.int16):
+        return codec.scale
+    coarse = jnp.float32((dcfg.extent + 2.0 * dcfg.halo_width) / 127.0)
+    fine = jnp.float32(dcfg.halo_width / 127.0)
+    return jnp.where(fresh[:, None], coarse, fine)
+
+
+def _codec_encode(
+    dcfg: "DomainConfig",
+    codec: HaloCodecState,
+    d: int,
+    s: int,
+    pos: Array,
+    ids: Array,
+    wire_dtype,
+) -> Tuple[Array, Array, HaloCodecState]:
+    """Delta-encode one channel's positions; returns (payload, fresh, codec')."""
+    fresh = ids != codec.prev_ids[d, s]
+    ref = jnp.where(fresh[:, None], 0.0, codec.send_ref[d, s])
+    ch = dcodec.DeltaCodec(ref=ref, scale=codec.scale)
+    scale = _slot_scales(dcfg, codec, fresh, wire_dtype)
+    q, ch = dcodec.encode(ch, pos, wire_dtype=wire_dtype, scale=scale)
+    codec = dataclasses.replace(
+        codec,
+        send_ref=codec.send_ref.at[d, s].set(ch.ref),
+        prev_ids=codec.prev_ids.at[d, s].set(ids),
+    )
+    return q, fresh, codec
+
+
+def _codec_decode(
+    dcfg: "DomainConfig",
+    codec: HaloCodecState,
+    d: int,
+    s: int,
+    q: Array,
+    fresh: Array,
+) -> Tuple[Array, HaloCodecState]:
+    ref = jnp.where(fresh[:, None], 0.0, codec.recv_ref[d, s])
+    ch = dcodec.DeltaCodec(ref=ref, scale=codec.scale)
+    scale = _slot_scales(dcfg, codec, fresh, q.dtype)
+    pos, ch = dcodec.decode(ch, q, scale=scale)
+    codec = dataclasses.replace(codec, recv_ref=codec.recv_ref.at[d, s].set(ch.ref))
+    return pos, codec
+
+
+def halo_exchange(
+    dcfg: DomainConfig,
+    pool: AgentPool,
+    codec: HaloCodecState,
+) -> Tuple[Array, Array, Array, Array, HaloCodecState, Array, Dict[str, int]]:
+    """Multi-phase aura exchange.
+
+    Returns ghost-extended arrays ``(position, radius, kind, alive)`` whose
+    first C rows are the local pool, followed by 2·D halo blocks, plus the
+    updated codec state, overflow count, and a per-step wire-byte account.
+    """
+    c = pool.capacity
+    h = dcfg.halo_capacity
+    wire = {"payload_bytes": 0, "baseline_bytes": 0}
+    wire_dtype = {"int16": jnp.int16, "int8": jnp.int8}.get(dcfg.halo_codec)
+
+    g_pos = pool.position
+    g_rad = pool.radius()
+    g_kind = pool.kind
+    g_alive = pool.alive
+    overflow = jnp.zeros((), jnp.int32)
+
+    for d in range(dcfg.n_decomposed):
+        axis = dcfg.mesh_axes[d]
+        size = dcfg.axis_sizes[d]
+        ext = dcfg.extent
+        hw = dcfg.halo_width
+        coord = g_pos[:, d]
+
+        # Agents in each face band (includes halos of previous phases → corners).
+        east_band = g_alive & (coord >= ext - hw) & (coord < ext)
+        west_band = g_alive & (coord >= 0.0) & (coord < hw)
+
+        packs = []
+        for s, (band, sign) in enumerate(((east_band, +1), (west_band, -1))):
+            ids, valid, ovf = _select(band, h)
+            overflow = overflow + ovf
+            pos = jnp.take(g_pos, ids, axis=0)
+            # Rebase into receiver frame.
+            pos = pos.at[:, d].add(-sign * ext)
+            pos = jnp.where(valid[:, None], pos, 0.0)
+            rad = jnp.where(valid, jnp.take(g_rad, ids), 0.0)
+            knd = jnp.where(valid, jnp.take(g_kind, ids), 0).astype(jnp.int8)
+
+            if wire_dtype is not None:
+                slot_ids = jnp.where(valid, ids, -1)
+                q, fresh, codec = _codec_encode(dcfg, codec, d, s, pos, slot_ids, wire_dtype)
+                payload = dict(q=q, fresh=fresh, rad=rad, kind=knd, valid=valid)
+                wire["payload_bytes"] += (
+                    q.size * q.dtype.itemsize + fresh.size // 8 + rad.size * 4
+                    + knd.size + valid.size // 8
+                )
+            else:
+                payload = dict(pos=pos, rad=rad, kind=knd, valid=valid)
+                wire["payload_bytes"] += pos.size * 4 + rad.size * 4 + knd.size + valid.size // 8
+            # Baseline = untruncated f32 full-attribute record (pos+rad+kind as f32/i32).
+            wire["baseline_bytes"] += pos.size * 4 + rad.size * 4 + knd.size * 4 + valid.size // 8
+            packs.append((payload, sign))
+
+        for s, (payload, sign) in enumerate(packs):
+            got = jax.tree.map(lambda x: _shift(x, axis, size, sign), payload)
+            if wire_dtype is not None:
+                pos, codec = _codec_decode(dcfg, codec, d, s, got["q"], got["fresh"])
+            else:
+                pos = got["pos"]
+            g_pos = jnp.concatenate([g_pos, pos], axis=0)
+            g_rad = jnp.concatenate([g_rad, got["rad"]], axis=0)
+            g_kind = jnp.concatenate([g_kind, got["kind"].astype(jnp.int32)], axis=0)
+            g_alive = jnp.concatenate([g_alive, got["valid"]], axis=0)
+
+    return g_pos, g_rad, g_kind, g_alive, codec, overflow, wire
+
+
+# ---------------------------------------------------------------------------
+# Distributed diffusion (1-voxel stencil halo along decomposed dims)
+# ---------------------------------------------------------------------------
+
+
+def distributed_diffuse(
+    dcfg: DomainConfig, grid: dgrid.DiffusionGrid, dt: float
+) -> dgrid.DiffusionGrid:
+    u = grid.concentration
+    padded = jnp.pad(u, 1)  # zero halo default (open boundary in z)
+    for d in range(dcfg.n_decomposed):
+        axis = dcfg.mesh_axes[d]
+        size = dcfg.axis_sizes[d]
+        lo_face = jax.lax.slice_in_dim(u, 0, 1, axis=d)
+        hi_face = jax.lax.slice_in_dim(u, u.shape[d] - 1, u.shape[d], axis=d)
+        from_west = _shift(hi_face, axis, size, +1)   # west neighbor's top slice
+        from_east = _shift(lo_face, axis, size, -1)   # east neighbor's bottom
+        # Place into padded halo positions (interior of the other dims).
+        idx_lo = [slice(1, -1)] * 3
+        idx_hi = [slice(1, -1)] * 3
+        idx_lo[d] = slice(0, 1)
+        idx_hi[d] = slice(padded.shape[d] - 1, padded.shape[d])
+        padded = padded.at[tuple(idx_lo)].set(from_west)
+        padded = padded.at[tuple(idx_hi)].set(from_east)
+
+    lap = (
+        padded[2:, 1:-1, 1:-1]
+        + padded[:-2, 1:-1, 1:-1]
+        + padded[1:-1, 2:, 1:-1]
+        + padded[1:-1, :-2, 1:-1]
+        + padded[1:-1, 1:-1, 2:]
+        + padded[1:-1, 1:-1, :-2]
+        - 6.0 * u
+    ) / (grid.spacing**2)
+    new = u * (1.0 - grid.decay_constant * dt) + grid.diffusion_coefficient * dt * lap
+    return dataclasses.replace(grid, concentration=new)
+
+
+# ---------------------------------------------------------------------------
+# The distributed step (per-device body; wrap with shard_map below)
+# ---------------------------------------------------------------------------
+
+
+def distributed_step(
+    dcfg: DomainConfig, ecfg: EngineConfig, state: DistState
+) -> DistState:
+    pool = state.pool
+
+    # §5.4.2 sorting at frequency (local, independent per device).
+    if ecfg.sort_frequency > 0:
+        do_sort = (state.step % ecfg.sort_frequency) == 0
+        pool = jax.lax.cond(
+            do_sort, lambda p: sort_agents(ecfg.spec, p), lambda p: p, pool
+        )
+
+    # 1. migration
+    pool, mig_ovf = migrate(dcfg, pool)
+
+    # 2. aura exchange
+    g_pos, g_rad, g_kind, g_alive, codec, halo_ovf, _ = halo_exchange(
+        dcfg, pool, state.codec
+    )
+
+    # 3. environment over ghost-extended set; queries = local agents only.
+    index = build_index_arrays(ecfg.spec, g_pos, g_alive)
+    cand, cand_mask = candidate_neighbors_arrays(
+        ecfg.spec,
+        index,
+        pool.position,
+        pool.alive,
+        query_ids=jnp.arange(pool.capacity, dtype=jnp.int32),
+    )
+
+    ctx = StepContext(
+        rng=jax.random.fold_in(jax.random.wrap_key_data(state.rng), state.step),
+        grids=dict(state.grids),
+        cand=cand,
+        cand_mask=cand_mask,
+        src_position=g_pos,
+        src_kind=g_kind,
+        dt=jnp.float32(ecfg.dt),
+        step=state.step,
+        min_bound=0.0,
+        max_bound=dcfg.extent,
+    )
+
+    # 4. behaviors
+    for behavior in ecfg.behaviors:
+        ctx, pool = behavior(ctx, pool)
+
+    # 5. mechanical forces against the ghost-extended neighborhood
+    if ecfg.force_params is not None:
+        if ecfg.force_tile:
+            force = forces_from_candidates_tiled(
+                pool.position, pool.radius(), cand, cand_mask,
+                ecfg.force_params, g_pos, g_rad, tile=ecfg.force_tile,
+            )
+        else:
+            force = forces_from_candidates(
+                pool.position,
+                pool.radius(),
+                cand,
+                cand_mask,
+                ecfg.force_params,
+                all_position=g_pos,
+                all_radius=g_rad,
+            )
+        force = jnp.where(pool.alive[:, None], force, 0.0)
+        pool = pool.replace(position=pool.position + force * ecfg.dt)
+
+    # Keep non-decomposed dims inside [0, depth] (closed); decomposed dims
+    # may exceed [0, extent) — migration handles them next iteration.
+    if dcfg.n_decomposed < 3 and dcfg.depth > 0:
+        z = jnp.clip(pool.position[:, dcfg.n_decomposed:], 0.0, dcfg.depth)
+        pool = pool.replace(
+            position=pool.position.at[:, dcfg.n_decomposed:].set(z)
+        )
+
+    # 6. diffusion with stencil halo exchange
+    grids = dict(ctx.grids)
+    if grids and ecfg.diffusion_frequency > 0:
+        do_diffuse = (state.step % ecfg.diffusion_frequency) == 0
+        for name, g in grids.items():
+            grids[name] = jax.lax.cond(
+                do_diffuse,
+                lambda gg: distributed_diffuse(
+                    dcfg, gg, ecfg.dt * ecfg.diffusion_frequency
+                ),
+                lambda gg: gg,
+                g,
+            )
+
+    pool = pool.replace(age=pool.age + jnp.where(pool.alive, ecfg.dt, 0.0))
+
+    return DistState(
+        pool=pool,
+        grids=grids,
+        codec=codec,
+        rng=state.rng,
+        step=state.step + 1,
+        migrate_overflow=state.migrate_overflow + mig_ovf,
+        halo_overflow=state.halo_overflow + halo_ovf,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Host-side construction + shard_map wrapper
+# ---------------------------------------------------------------------------
+
+
+def init_dist_state(
+    dcfg: DomainConfig,
+    capacity: int,
+    positions: np.ndarray,
+    diameter: float = 10.0,
+    kind: Optional[np.ndarray] = None,
+    grids: Optional[Dict[str, dgrid.DiffusionGrid]] = None,
+    seed: int = 0,
+) -> DistState:
+    """Build the *stacked* global state from global agent positions (host).
+
+    positions are global coordinates in [0, extent·axis_size) per decomposed
+    dim; they are binned to devices and re-based to local frames.
+    """
+    n_dev = dcfg.n_devices
+    kind = np.zeros((positions.shape[0],), np.int32) if kind is None else kind
+
+    # Device linear index: x-major over mesh_axes order.
+    dev_coord = []
+    local = positions.copy().astype(np.float32)
+    for d in range(dcfg.n_decomposed):
+        c = np.floor(positions[:, d] / dcfg.extent).astype(np.int64)
+        c = np.clip(c, 0, dcfg.axis_sizes[d] - 1)
+        dev_coord.append(c)
+        local[:, d] = positions[:, d] - c * dcfg.extent
+    lin = np.zeros(positions.shape[0], np.int64)
+    for d in range(dcfg.n_decomposed):
+        lin = lin * dcfg.axis_sizes[d] + dev_coord[d]
+
+    pools = []
+    for dev in range(n_dev):
+        sel = lin == dev
+        n_here = int(sel.sum())
+        if n_here > capacity:
+            raise ValueError(
+                f"device {dev} holds {n_here} agents > capacity {capacity}"
+            )
+        pools.append(
+            make_pool(capacity, local[sel], diameter=diameter, kind=jnp.asarray(kind[sel]))
+        )
+    pool = jax.tree.map(lambda *xs: jnp.stack(xs), *pools)
+
+    base_grids = dict(grids or {})
+    stacked_grids = {
+        name: jax.tree.map(lambda x: jnp.stack([x] * n_dev), g)
+        for name, g in base_grids.items()
+    }
+    scale = (dcfg.extent + 2 * dcfg.halo_width) / 32767.0
+    codec = HaloCodecState.create(dcfg.n_decomposed, dcfg.halo_capacity, scale)
+    codec = jax.tree.map(lambda x: jnp.stack([x] * n_dev), codec)
+
+    # Raw uint32 key data (old-style PRNGKey) — passes through shard_map as a
+    # plain array; wrapped with wrap_key_data inside the per-device body.
+    rngs = jnp.stack([jax.random.PRNGKey(seed + i) for i in range(n_dev)])
+    zeros = jnp.zeros((n_dev,), jnp.int32)
+    return DistState(
+        pool=pool,
+        grids=stacked_grids,
+        codec=codec,
+        rng=rngs,
+        step=zeros,
+        migrate_overflow=zeros,
+        halo_overflow=zeros,
+    )
+
+
+def make_distributed_step(mesh, dcfg: DomainConfig, ecfg: EngineConfig):
+    """jit(shard_map(step)) over the stacked state representation.
+
+    The global state stacks per-device states on a leading axis sharded over
+    all spatial mesh axes (a single PartitionSpec prefix covers the whole
+    pytree); inside shard_map each device sees a leading dim of one, squeezed
+    before / restored after the per-device body.
+    """
+    axes = tuple(dcfg.mesh_axes)
+    spec_leading = P(axes)
+
+    def body(state: DistState) -> DistState:
+        local = jax.tree.map(lambda x: x[0], state)
+        idx = jnp.zeros((), jnp.int32)
+        for i, ax in enumerate(axes):
+            idx = idx * jnp.int32(dcfg.axis_sizes[i]) + jax.lax.axis_index(ax)
+        local = dataclasses.replace(
+            local,
+            rng=jax.random.key_data(
+                jax.random.fold_in(jax.random.wrap_key_data(local.rng), idx)
+            ),
+        )
+        new = distributed_step(dcfg, ecfg, local)
+        new = dataclasses.replace(new, rng=state.rng[0])
+        return jax.tree.map(lambda x: x[None], new)
+
+    sharded = shard_map(body, mesh=mesh, in_specs=spec_leading, out_specs=spec_leading)
+    return jax.jit(sharded)
+
+
+def global_kind_counts(state: DistState, n_kinds: int = 3) -> Array:
+    """Host-side observable across all devices."""
+    kind = state.pool.kind.reshape(-1)
+    alive = state.pool.alive.reshape(-1)
+    onehot = (kind[:, None] == jnp.arange(n_kinds)[None, :]) & alive[:, None]
+    return jnp.sum(onehot.astype(jnp.int32), axis=0)

@@ -1,0 +1,221 @@
+"""Mechanical contact forces between spherical agents (§4.5.1, Eq 4.1).
+
+    F_N = k·δ − γ·√(r̄·δ),   δ = r₁ + r₂ − |x₁ − x₂|,   r̄ = r₁r₂/(r₁+r₂)
+
+applied along the center line when agents overlap (δ > 0).  This is the
+dominant operation of the paper's benchmarks (§5.6.3: "mechanical forces"
+takes the largest share of runtime), hence it is the Pallas-kernel hot spot
+(`repro.kernels.pairwise_force`).
+
+Static-agent force omission (§5.5): the paper detects agents whose resulting
+force is guaranteed zero-displacement (agent and its whole neighborhood did
+not move last iteration) and skips them.  TPUs cannot early-exit a SIMD lane,
+so the adaptation is *work compaction*: gather the indices of non-static
+agents into a bounded active set and evaluate forces only for that set,
+scattering results back.  FLOPs then scale with the number of moving agents,
+which is the paper's intent.  When the active set overflows its bound we fall
+back to evaluating everything (correctness first).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .agents import AgentPool
+from .grid import GridIndex, GridSpec, candidate_neighbors
+
+Array = jax.Array
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class ForceParams:
+    """Eq 4.1 parameters.  BioDynaMo/Cortex3D defaults: k=2, γ=1."""
+
+    repulsion_k: float = dataclasses.field(metadata=dict(static=True), default=2.0)
+    attraction_gamma: float = dataclasses.field(metadata=dict(static=True), default=1.0)
+    # Displacement below this (per iteration) marks an agent "not moved" for
+    # the §5.5 static-agent detection.
+    static_tolerance: float = dataclasses.field(metadata=dict(static=True), default=1e-4)
+
+
+def pair_force(
+    dx: Array, r1: Array, r2: Array, params: ForceParams
+) -> Array:
+    """Force on agent 1 from agent 2.  dx = x1 - x2, shape (..., 3)."""
+    dist = jnp.sqrt(jnp.sum(dx * dx, axis=-1) + 1e-20)
+    delta = r1 + r2 - dist
+    overlap = delta > 0.0
+    rbar = r1 * r2 / jnp.maximum(r1 + r2, 1e-20)
+    magnitude = (
+        params.repulsion_k * delta
+        - params.attraction_gamma * jnp.sqrt(jnp.maximum(rbar * delta, 0.0))
+    )
+    direction = dx / dist[..., None]
+    return jnp.where(overlap[..., None], magnitude[..., None] * direction, 0.0)
+
+
+def forces_from_candidates(
+    position: Array,
+    radius: Array,
+    cand: Array,
+    cand_mask: Array,
+    params: ForceParams,
+    all_position: Optional[Array] = None,
+    all_radius: Optional[Array] = None,
+) -> Array:
+    """Sum Eq-4.1 forces over each agent's candidate neighbor set.
+
+    position/radius: (N, 3)/(N,) query agents.
+    cand:            (N, K) int32 indices into the *full* pool.
+    cand_mask:       (N, K) bool.
+    all_position/all_radius: full pool arrays to gather candidates from
+                     (default: same as query arrays).
+    """
+    src_pos = position if all_position is None else all_position
+    src_rad = radius if all_radius is None else all_radius
+    safe = jnp.where(cand_mask, cand, 0)
+    npos = jnp.take(src_pos, safe, axis=0)                 # (N, K, 3)
+    nrad = jnp.take(src_rad, safe, axis=0)                 # (N, K)
+    dx = position[:, None, :] - npos                       # (N, K, 3)
+    f = pair_force(dx, radius[:, None], nrad, params)      # (N, K, 3)
+    f = jnp.where(cand_mask[:, :, None], f, 0.0)
+    return jnp.sum(f, axis=1)                              # (N, 3)
+
+
+def forces_from_candidates_tiled(
+    position: Array,
+    radius: Array,
+    cand: Array,
+    cand_mask: Array,
+    params: ForceParams,
+    all_position: Array,
+    all_radius: Array,
+    tile: int,
+    unroll: bool = True,
+) -> Array:
+    """Tile-wise force evaluation (§Perf teraagent iteration).
+
+    The dense path materializes the full (N, K, 3) candidate gather plus
+    ~four (N, K) force intermediates — ~36 GB at N=1M, K=864.  Mapping over
+    agent tiles bounds the working set to one tile's worth (the XLA-level
+    analogue of the Pallas kernel's VMEM tiling; on real TPU the
+    `pairwise_force` kernel eliminates the intermediates entirely).
+
+    ``unroll=True`` (default) emits a python loop over tiles — correct
+    cost_analysis accounting (while-loop bodies are counted once) and the
+    scheduler still reuses one tile's buffers; ``unroll=False`` uses
+    ``lax.map`` (smaller HLO for very large tile counts)."""
+    n = position.shape[0]
+    pad = (-n) % tile
+    padz = lambda x: jnp.pad(x, [(0, pad)] + [(0, 0)] * (x.ndim - 1))
+    pos_t = padz(position).reshape(-1, tile, 3)
+    rad_t = padz(radius).reshape(-1, tile)
+    cand_t = padz(cand).reshape(-1, tile, cand.shape[1])
+    mask_t = padz(cand_mask).reshape(-1, tile, cand.shape[1])
+
+    def one(args):
+        p, r, c, m = args
+        return forces_from_candidates(
+            p, r, c, m, params,
+            all_position=all_position, all_radius=all_radius,
+        )
+
+    if unroll:
+        outs = [one((pos_t[i], rad_t[i], cand_t[i], mask_t[i]))
+                for i in range(pos_t.shape[0])]
+        out = jnp.concatenate(outs, axis=0)
+        return out[:n]
+    out = jax.lax.map(one, (pos_t, rad_t, cand_t, mask_t))
+    return out.reshape(-1, 3)[:n]
+
+
+def mechanical_forces(
+    spec: GridSpec,
+    index: GridIndex,
+    pool: AgentPool,
+    params: ForceParams,
+    active_capacity: Optional[int] = None,
+    impl: str = "reference",
+) -> Array:
+    """Net mechanical force per agent, (C, 3).
+
+    active_capacity: if given, §5.5 work compaction — only agents with
+    ``~pool.static`` are evaluated (bounded by this capacity; overflow falls
+    back to the full evaluation).  ``impl`` selects "reference" (pure jnp) or
+    "pallas" (`repro.kernels.pairwise_force`).
+    """
+    cand, mask = candidate_neighbors(spec, index, pool)
+    radius = pool.radius()
+
+    if impl == "pallas":
+        from repro.kernels.pairwise_force import ops as pf_ops
+
+        dense = lambda: pf_ops.pairwise_force(
+            pool.position, radius, cand, mask,
+            k=params.repulsion_k, gamma=params.attraction_gamma,
+        )
+    else:
+        dense = lambda: forces_from_candidates(
+            pool.position, radius, cand, mask, params
+        )
+
+    if active_capacity is None:
+        force = dense()
+        return jnp.where(pool.alive[:, None], force, 0.0)
+
+    # ---- §5.5 static-agent omission via work compaction -------------------
+    c = pool.capacity
+    a = int(active_capacity)
+    active = pool.alive & ~pool.static
+    n_active = jnp.sum(active.astype(jnp.int32))
+
+    def compacted_path(_):
+        # Deterministic compaction: indices of active agents first (stable).
+        order = jnp.argsort(~active, stable=True)          # active ids first
+        act_ids = order[:a]                                # (A,)
+        act_valid = jnp.arange(a) < jnp.minimum(n_active, a)
+        gather = lambda x: jnp.take(x, act_ids, axis=0)
+        sub_force = forces_from_candidates(
+            gather(pool.position),
+            gather(radius),
+            gather(cand),
+            gather(mask) & act_valid[:, None],
+            params,
+            all_position=pool.position,
+            all_radius=radius,
+        )
+        return (
+            jnp.zeros((c, 3), sub_force.dtype)
+            .at[act_ids]
+            .add(jnp.where(act_valid[:, None], sub_force, 0.0))
+        )
+
+    # lax.cond: only one branch executes — overflow falls back to the full
+    # evaluation (correctness), the common case pays O(actives) only.
+    force = jax.lax.cond(
+        n_active <= a, compacted_path, lambda _: dense(), operand=None
+    )
+    return jnp.where(pool.alive[:, None], force, 0.0)
+
+
+def update_static_flags(
+    pool: AgentPool,
+    displacement: Array,
+    cand: Array,
+    cand_mask: Array,
+    params: ForceParams,
+) -> AgentPool:
+    """§5.5 static detection: an agent may be skipped next iteration iff
+    neither it nor any neighbor moved more than the tolerance this iteration.
+    """
+    moved = jnp.linalg.norm(displacement, axis=-1) > params.static_tolerance
+    moved = moved & pool.alive
+    safe = jnp.where(cand_mask, cand, 0)
+    neighbor_moved = jnp.any(jnp.take(moved, safe) & cand_mask, axis=1)
+    static = pool.alive & ~moved & ~neighbor_moved
+    return pool.replace(static=static)

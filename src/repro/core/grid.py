@@ -1,0 +1,231 @@
+"""Uniform-grid environment: fixed-radius neighbor search (§5.3.1).
+
+BioDynaMo's UniformGridEnvironment divides space into boxes of edge length
+``box_size`` (≥ the interaction radius) and stores each box's agents in an
+array-based linked list, rebuilt in O(#agents) per iteration via timestamps.
+
+TPU adaptation (see DESIGN.md):
+  * build = sort.  Agents are sorted by their (optionally Morton-ordered) cell
+    id; each box's agents are then a contiguous run of the sorted order.  The
+    sort *is* the paper's §5.4.2 agent-sorting optimization — on TPU the grid
+    build and the memory-layout optimization fuse into a single primitive.
+  * linked list = cell list.  A dense ``(n_cells, max_per_cell)`` index tensor
+    replaces pointer chasing: deterministic ranks (position-in-run) scatter
+    each agent into its cell row.  Overflow is detected, not UB.
+  * query = 27-box gather.  Fixed-radius neighbor candidates are the 3×3×3
+    box neighborhood, a static-shape gather of ``27 * max_per_cell`` slots.
+
+The returned :class:`GridIndex` is a pytree so it can flow through jit/scan.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import morton
+from .agents import AgentPool, permute
+
+Array = jax.Array
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class GridSpec:
+    """Static description of the uniform grid (metadata, not traced)."""
+
+    origin: Tuple[float, float, float] = dataclasses.field(metadata=dict(static=True))
+    box_size: float = dataclasses.field(metadata=dict(static=True))
+    dims: Tuple[int, int, int] = dataclasses.field(metadata=dict(static=True))
+    max_per_cell: int = dataclasses.field(metadata=dict(static=True))
+    use_morton: bool = dataclasses.field(metadata=dict(static=True), default=True)
+
+    @property
+    def n_cells(self) -> int:
+        nx, ny, nz = self.dims
+        return nx * ny * nz
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class GridIndex:
+    """Built neighbor index over one agent pool.
+
+    cell_of_agent: (C,)  int32 — linear cell id per agent (dead → n_cells).
+    cell_list:     (n_cells, M) int32 — agent index per slot, C where empty.
+    cell_count:    (n_cells,) int32 — #agents per cell (may exceed M; overflow).
+    overflowed:    ()   bool — any cell exceeded max_per_cell.
+    """
+
+    cell_of_agent: Array
+    cell_list: Array
+    cell_count: Array
+    overflowed: Array
+
+
+def cell_coords(spec: GridSpec, position: Array) -> Array:
+    """(N,3) float positions → (N,3) int32 cell coordinates, clipped to grid."""
+    origin = jnp.asarray(spec.origin, jnp.float32)
+    rel = (position - origin) / jnp.float32(spec.box_size)
+    ijk = jnp.floor(rel).astype(jnp.int32)
+    dims = jnp.asarray(spec.dims, jnp.int32)
+    return jnp.clip(ijk, 0, dims - 1)
+
+
+def linear_cell_id(spec: GridSpec, ijk: Array) -> Array:
+    nx, ny, nz = spec.dims
+    return (ijk[..., 0] * ny + ijk[..., 1]) * nz + ijk[..., 2]
+
+
+def sort_key(spec: GridSpec, ijk: Array) -> Array:
+    """Sort key per agent: Morton code (default) or row-major linear id."""
+    if spec.use_morton:
+        return morton.encode3(
+            ijk[..., 0].astype(jnp.uint32),
+            ijk[..., 1].astype(jnp.uint32),
+            ijk[..., 2].astype(jnp.uint32),
+        ).astype(jnp.uint32)
+    return linear_cell_id(spec, ijk).astype(jnp.uint32)
+
+
+def sort_agents(spec: GridSpec, pool: AgentPool) -> AgentPool:
+    """§5.4.2 agent sorting: reorder the pool along the space-filling curve.
+
+    Dead agents sort to the back (key = max), which doubles as the paper's
+    §5.3.2 compaction.
+    """
+    ijk = cell_coords(spec, pool.position)
+    key = sort_key(spec, ijk)
+    key = jnp.where(pool.alive, key, jnp.uint32(0xFFFFFFFF))
+    perm = jnp.argsort(key, stable=True)
+    return permute(pool, perm)
+
+
+def build_index_arrays(spec: GridSpec, position: Array, alive: Array) -> GridIndex:
+    """Build the cell list (the §5.3.1 'build stage'), fully parallel.
+
+    Steps (all O(C) scatters/segment-sums — the TPU analogue of the paper's
+    timestamped O(#agents) build):
+      1. cell id per agent;
+      2. rank of each agent within its cell, via sorted-run position;
+      3. scatter agent indices into ``cell_list[cell, rank]``.
+    """
+    c = position.shape[0]
+    n_cells = spec.n_cells
+    ijk = cell_coords(spec, position)
+    cid = jnp.where(alive, linear_cell_id(spec, ijk), n_cells)  # (C,)
+
+    # Rank within cell: sort agent ids by cell, positions within equal-cid runs
+    # give ranks; then scatter ranks back to agent order.
+    order = jnp.argsort(cid, stable=True)                  # agent ids, cell-grouped
+    sorted_cid = cid[order]
+    # start-of-run marker → rank = position - start_of_run_position.
+    pos = jnp.arange(c, dtype=jnp.int32)
+    is_start = jnp.concatenate(
+        [jnp.ones((1,), bool), sorted_cid[1:] != sorted_cid[:-1]]
+    )
+    run_start = jax.lax.cummax(jnp.where(is_start, pos, -1))
+    rank_sorted = pos - run_start                          # rank within cell
+    rank = jnp.zeros((c,), jnp.int32).at[order].set(rank_sorted)
+
+    counts = jnp.zeros((n_cells + 1,), jnp.int32).at[cid].add(1)
+    cell_count = counts[:n_cells]
+    overflowed = jnp.any(cell_count > spec.max_per_cell)
+
+    # Scatter into the dense cell list (drop overflow + dead).
+    m = spec.max_per_cell
+    valid = alive & (rank < m)
+    flat_idx = jnp.where(valid, cid * m + rank, n_cells * m)
+    cell_list = jnp.full((n_cells * m + 1,), c, jnp.int32)
+    cell_list = cell_list.at[flat_idx].set(
+        jnp.arange(c, dtype=jnp.int32), mode="drop"
+    )[: n_cells * m].reshape(n_cells, m)
+
+    return GridIndex(
+        cell_of_agent=cid.astype(jnp.int32),
+        cell_list=cell_list,
+        cell_count=cell_count,
+        overflowed=overflowed,
+    )
+
+
+def build_index(spec: GridSpec, pool: AgentPool) -> GridIndex:
+    return build_index_arrays(spec, pool.position, pool.alive)
+
+
+_NEIGHBOR_OFFSETS = jnp.asarray(
+    [(dx, dy, dz) for dx in (-1, 0, 1) for dy in (-1, 0, 1) for dz in (-1, 0, 1)],
+    jnp.int32,
+)  # (27, 3)
+
+
+def candidate_neighbors_arrays(
+    spec: GridSpec,
+    index: GridIndex,
+    query_position: Array,
+    query_alive: Array,
+    query_ids: Array | None = None,
+) -> tuple[Array, Array]:
+    """For every query agent, gather candidate neighbor ids (27-box stencil).
+
+    ``index`` may have been built over a *superset* of the queries (e.g. local
+    + halo agents in the distributed engine); ``query_ids`` gives each query's
+    own index in that superset so self-pairs are excluded (defaults to
+    ``arange`` — queries are the indexed set itself).
+
+    Returns ``(cand, mask)``: ``cand (N, 27*M) int32`` into the indexed set
+    (out-of-range slots = indexed-set capacity), ``mask (N, 27*M) bool``.
+    """
+    n = query_position.shape[0]
+    m = spec.max_per_cell
+    dims = jnp.asarray(spec.dims, jnp.int32)
+    ijk = cell_coords(spec, query_position)                      # (N, 3)
+    nbr = ijk[:, None, :] + _NEIGHBOR_OFFSETS[None, :, :]        # (N, 27, 3)
+    in_range = jnp.all((nbr >= 0) & (nbr < dims), axis=-1)       # (N, 27)
+    nbr_clipped = jnp.clip(nbr, 0, dims - 1)
+    nbr_cid = linear_cell_id(spec, nbr_clipped)                  # (N, 27)
+
+    cand = index.cell_list[nbr_cid]                              # (N, 27, M)
+    sentinel = index.cell_of_agent.shape[0]                      # indexed capacity
+    valid = in_range[:, :, None] & (cand < sentinel)             # (N, 27, M)
+    cand = jnp.where(valid, cand, sentinel)
+    cand = cand.reshape(n, 27 * m)
+    valid = valid.reshape(n, 27 * m)
+    if query_ids is None:
+        query_ids = jnp.arange(n, dtype=jnp.int32)
+    not_self = cand != query_ids[:, None]
+    mask = valid & not_self & query_alive[:, None]
+    return cand, mask
+
+
+def candidate_neighbors(spec: GridSpec, index: GridIndex, pool: AgentPool) -> tuple[Array, Array]:
+    """Candidate neighbors of every agent in the pool (mask: valid ∧ ¬self)."""
+    return candidate_neighbors_arrays(spec, index, pool.position, pool.alive)
+
+
+def spec_for_space(
+    min_bound: float,
+    max_bound: float,
+    interaction_radius: float,
+    max_per_cell: int = 16,
+    use_morton: bool = True,
+) -> GridSpec:
+    """Convenience: cubic simulation space with box size = interaction radius.
+
+    Mirrors BioDynaMo's automatic box sizing: boxes at least as large as the
+    largest interaction radius so the 27-box stencil is sufficient.
+    """
+    extent = float(max_bound - min_bound)
+    n = max(int(extent / interaction_radius), 1)
+    n = min(n, morton.max_grid_dim())
+    box = extent / n
+    return GridSpec(
+        origin=(min_bound, min_bound, min_bound),
+        box_size=box,
+        dims=(n, n, n),
+        max_per_cell=max_per_cell,
+        use_morton=use_morton,
+    )

@@ -1,0 +1,83 @@
+"""Deterministic synthetic token pipeline.
+
+Stateless-seeded: ``batch(step)`` is a pure function of (seed, step), so a
+restarted run regenerates identical batches with no pipeline checkpointing —
+the fault-tolerance property the launcher relies on (DESIGN.md §5).  Batches
+are placed with the mesh's data-parallel sharding; on a multi-host cluster
+each host materializes only its addressable shard (jax.make_array_from_
+callback), so host memory stays O(batch/hosts).
+
+Synthetic text: a mixture of Zipf-distributed unigrams and a Markov-ish
+repetition process, so the loss curve has learnable structure (repetition
+and frequency) instead of irreducible uniform noise.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    seed: int = 0
+    batch: int = 8
+    seq_len: int = 256
+    zipf_a: float = 1.2
+    repeat_p: float = 0.3          # P(copy token from 8 back)
+
+
+def _tokens_for_step(cfg: DataConfig, vocab: int, step: int) -> np.ndarray:
+    rng = np.random.default_rng(np.random.SeedSequence([cfg.seed, step]))
+    b, t = cfg.batch, cfg.seq_len
+    # Zipf unigrams truncated to vocab
+    base = rng.zipf(cfg.zipf_a, size=(b, t)).astype(np.int64)
+    base = (base - 1) % vocab
+    # repetition structure: with prob p, copy the token 8 positions back
+    rep = rng.random((b, t)) < cfg.repeat_p
+    out = base.copy()
+    out[:, 8:][rep[:, 8:]] = out[:, :-8][rep[:, 8:]]
+    return out.astype(np.int32)
+
+
+def host_batch(cfg: DataConfig, model_cfg: ModelConfig, step: int) -> Dict[str, np.ndarray]:
+    """NumPy batch for one step (host-side)."""
+    toks = _tokens_for_step(cfg, model_cfg.vocab_size, step)
+    batch = {
+        "tokens": toks,
+        "targets": np.concatenate(
+            [toks[:, 1:], np.full((cfg.batch, 1), -1, np.int32)], axis=1
+        ),
+    }
+    if model_cfg.is_encoder_decoder:
+        rng = np.random.default_rng(np.random.SeedSequence([cfg.seed, step, 7]))
+        batch["frames"] = rng.normal(
+            0, 1, (cfg.batch, model_cfg.encoder_seq, model_cfg.d_model)
+        ).astype(np.float32)
+    if model_cfg.family == "vlm":
+        rng = np.random.default_rng(np.random.SeedSequence([cfg.seed, step, 9]))
+        batch["patches"] = rng.normal(
+            0, 1, (cfg.batch, model_cfg.prefix_tokens, model_cfg.d_model)
+        ).astype(np.float32)
+    return batch
+
+
+def device_batch(cfg: DataConfig, model_cfg: ModelConfig, step: int,
+                 shardings: Optional[Dict] = None) -> Dict[str, jax.Array]:
+    """Batch placed on device(s) with the given shardings (or default)."""
+    host = host_batch(cfg, model_cfg, step)
+    if shardings is None:
+        return {k: jnp.asarray(v) for k, v in host.items()}
+    out = {}
+    for k, v in host.items():
+        sh = shardings[k]
+        out[k] = jax.make_array_from_callback(
+            v.shape, sh, lambda idx, vv=v: vv[idx]
+        )
+    return out

@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+Each kernel package has:
+  kernel.py — pl.pallas_call + BlockSpec tiling (TPU target, interpret-validated)
+  ops.py    — jit'd dispatch wrapper (impl="pallas" | "reference" | …)
+  ref.py    — pure-jnp oracle
+
+Kernels:
+  pairwise_force  — Eq 4.1 contact forces, the §5.6.3 hot spot
+  diffusion3d     — Eq 4.3 seven-point stencil
+  flash_attention — online-softmax attention for the LM stack (GQA/causal/window)
+  rmsnorm         — fused residual-stream normalization (one read, one write)
+"""

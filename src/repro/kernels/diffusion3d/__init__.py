@@ -1,0 +1,2 @@
+"""diffusion3d kernel package."""
+from . import kernel, ops, ref  # noqa: F401

@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the 3D diffusion stencil (Eq 4.3)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def diffusion_step_ref(u: Array, nu_dt_dx2: float, decay_dt: float) -> Array:
+    """One explicit central-difference step with zero-outside boundary:
+
+        u⁺ = u·(1 − μΔt) + νΔt/Δx²·(Σ_neighbors u − 6u)
+    """
+    z = jnp.pad(u, 1)
+    lap = (
+        z[2:, 1:-1, 1:-1]
+        + z[:-2, 1:-1, 1:-1]
+        + z[1:-1, 2:, 1:-1]
+        + z[1:-1, :-2, 1:-1]
+        + z[1:-1, 1:-1, 2:]
+        + z[1:-1, 1:-1, :-2]
+        - 6.0 * u
+    )
+    return u * (1.0 - decay_dt) + nu_dt_dx2 * lap

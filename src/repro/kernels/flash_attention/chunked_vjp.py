@@ -1,0 +1,166 @@
+"""Memory-optimal chunked attention with a custom VJP.
+
+``lax.scan``-differentiated online softmax saves the (B,H,nq,BQ,D) fp32
+accumulator *per KV step* — O(T²/BK) backward memory, which OOMs a 4k×1M-
+token train step.  This module implements the FlashAttention backward
+instead: the forward saves only (q, k, v, out, lse); the backward re-forms
+each block's probabilities from the saved logsumexp and accumulates
+dq / dk / dv blockwise:
+
+    p   = exp(q·kᵀ·s − lse)            (recomputed per block)
+    dv += pᵀ · do
+    dp  = do · vᵀ
+    ds  = p ⊙ (dp − rowsum(do ⊙ out)) · s
+    dq += ds · k ;   dk += dsᵀ · q
+
+Residual memory is O(B·H·T·D) — the roofline-minimal footprint, matching
+what the Pallas kernel's bwd does on real TPU hardware.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+NEG_INF = -1e30
+
+
+def _mask_block(
+    nq: int, block_q: int, block_k: int, kj: Array, tk: int,
+    causal: bool, window: Optional[int], prefix_len: int, kv_offset: int,
+    nq_period: Optional[int] = None,
+):
+    """(nq, BQ, BK) visibility mask for KV block kj.
+
+    ``nq_period``: when GQA query groups are folded into the q-block dim
+    (dim = group·nq_real), positions repeat with period nq_real."""
+    per = nq if nq_period is None else nq_period
+    q_pos = (
+        (jnp.arange(nq) % per)[:, None] * block_q
+        + jnp.arange(block_q)[None, :] + kv_offset
+    )  # (nq, BQ)
+    k_pos = kj * block_k + jnp.arange(block_k)  # (BK,)
+    mask = jnp.broadcast_to(
+        (k_pos < tk)[None, None, :], (nq, block_q, block_k)
+    )
+    vis = jnp.ones((nq, block_q, block_k), bool)
+    if causal:
+        vis = q_pos[:, :, None] >= k_pos[None, None, :]
+    if window is not None:
+        vis = vis & ((q_pos[:, :, None] - k_pos[None, None, :]) < window)
+    if prefix_len > 0:
+        vis = vis | (k_pos[None, None, :] < prefix_len)
+    return mask & vis
+
+
+@functools.partial(
+    jax.custom_vjp,
+    nondiff_argnums=(3, 4, 5, 6, 7, 8, 9, 10, 11, 12),
+)
+def chunked_attention_core(
+    qb: Array,   # (B, H, nq, BQ, D) fp32, padded + blocked
+    kb: Array,   # (B, H, nk, BK, D) — H = kv heads; GQA groups folded into
+    vb: Array,   #                    qb's block dim (nq = group·nq_real)
+    tk: int,     # true (unpadded) kv length
+    causal: bool,
+    window: Optional[int],
+    prefix_len: int,
+    kv_offset: int,
+    block_q: int,
+    block_k: int,
+    scale: float,
+    unroll: bool = False,
+    nq_period: Optional[int] = None,
+):
+    out, _ = _forward(qb, kb, vb, tk, causal, window, prefix_len, kv_offset,
+                      block_q, block_k, scale, unroll, nq_period)
+    return out
+
+
+def _forward(qb, kb, vb, tk, causal, window, prefix_len, kv_offset,
+             block_q, block_k, scale, unroll=False, nq_period=None):
+    b, h, nq, bq, d = qb.shape
+    nk = kb.shape[2]
+
+    def kv_step(carry, inputs):
+        m_prev, l_prev, acc = carry
+        kj, k_blk, v_blk = inputs                       # (B,H,BK,D)
+        k_blk = k_blk.astype(jnp.float32)
+        v_blk = v_blk.astype(jnp.float32)
+        s = jnp.einsum("bhqtd,bhkd->bhqtk", qb, k_blk) * scale
+        mask = _mask_block(nq, bq, block_k, kj, tk, causal, window,
+                           prefix_len, kv_offset, nq_period)
+        s = jnp.where(mask[None, None], s, NEG_INF)
+        m_cur = jnp.max(s, axis=-1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        p = jnp.where(mask[None, None], p, 0.0)
+        l_new = alpha * l_prev + jnp.sum(p, axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum("bhqtk,bhkd->bhqtd", p, v_blk)
+        return (m_new, l_new, acc), None
+
+    init = (
+        jnp.full((b, h, nq, bq), NEG_INF, jnp.float32),
+        jnp.zeros((b, h, nq, bq), jnp.float32),
+        jnp.zeros((b, h, nq, bq, d), jnp.float32),
+    )
+    ks = jnp.moveaxis(kb, 2, 0)
+    vs = jnp.moveaxis(vb, 2, 0)
+    body = jax.checkpoint(kv_step)  # recompute blocks, don't save s/p
+    (m, l, acc), _ = jax.lax.scan(body, init, (jnp.arange(nk), ks, vs),
+                                  unroll=nk if unroll else 1)
+    lse = m + jnp.log(jnp.maximum(l, 1e-30))            # (B,H,nq,BQ)
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out, lse
+
+
+def _fwd(qb, kb, vb, tk, causal, window, prefix_len, kv_offset,
+         block_q, block_k, scale, unroll=False, nq_period=None):
+    out, lse = _forward(qb, kb, vb, tk, causal, window, prefix_len, kv_offset,
+                        block_q, block_k, scale, unroll, nq_period)
+    return out, (qb, kb, vb, out, lse)
+
+
+def _bwd(tk, causal, window, prefix_len, kv_offset, block_q, block_k, scale,
+         unroll, nq_period, res, dout):
+    qb, kb, vb, out, lse = res
+    b, h, nq, bq, d = qb.shape
+    nk = kb.shape[2]
+    delta = jnp.sum(dout * out, axis=-1)                # (B,H,nq,BQ)
+
+    def kv_step(dq_acc, inputs):
+        kj, k_blk, v_blk = inputs
+        k_blk = k_blk.astype(jnp.float32)
+        v_blk = v_blk.astype(jnp.float32)
+        s = jnp.einsum("bhqtd,bhkd->bhqtk", qb, k_blk) * scale
+        mask = _mask_block(nq, bq, block_k, kj, tk, causal, window,
+                           prefix_len, kv_offset, nq_period)
+        s = jnp.where(mask[None, None], s, NEG_INF)
+        p = jnp.exp(s - lse[..., None])
+        p = jnp.where(mask[None, None], p, 0.0)          # (B,H,nq,BQ,BK)
+        dv = jnp.einsum("bhqtk,bhqtd->bhkd", p, dout)
+        dp = jnp.einsum("bhqtd,bhkd->bhqtk", dout, v_blk)
+        ds = p * (dp - delta[..., None]) * scale
+        dq_acc = dq_acc + jnp.einsum("bhqtk,bhkd->bhqtd", ds, k_blk)
+        dk = jnp.einsum("bhqtk,bhqtd->bhkd", ds, qb)
+        return dq_acc, (dk, dv)
+
+    ks = jnp.moveaxis(kb, 2, 0)
+    vs = jnp.moveaxis(vb, 2, 0)
+    body = jax.checkpoint(kv_step)
+    dq, (dks, dvs) = jax.lax.scan(
+        body, jnp.zeros_like(qb), (jnp.arange(nk), ks, vs),
+        unroll=nk if unroll else 1,
+    )
+    dk = jnp.moveaxis(dks, 0, 2).astype(kb.dtype)
+    dv = jnp.moveaxis(dvs, 0, 2).astype(vb.dtype)
+    return dq, dk, dv
+
+
+chunked_attention_core.defvjp(_fwd, _bwd)

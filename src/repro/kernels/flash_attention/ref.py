@@ -1,0 +1,51 @@
+"""Pure-jnp oracle for flash attention: masked softmax attention with GQA,
+causal and sliding-window support.  O(T²) memory — used for small test
+shapes and as the numerical reference."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+NEG_INF = -1e30
+
+
+def attention_ref(
+    q: Array,              # (B, Hq, Tq, D)
+    k: Array,              # (B, Hkv, Tk, D)
+    v: Array,              # (B, Hkv, Tk, D)
+    causal: bool = True,
+    window: Optional[int] = None,   # sliding window size (None = full)
+    kv_offset: int = 0,             # absolute position of k[0] minus q[0] offset
+    prefix_len: int = 0,            # prefix-LM: keys < prefix always visible
+    scale: Optional[float] = None,
+) -> Array:
+    b, hq, tq, d = q.shape
+    _, hkv, tk, _ = k.shape
+    assert hq % hkv == 0
+    group = hq // hkv
+    scale = (d ** -0.5) if scale is None else scale
+
+    kr = jnp.repeat(k, group, axis=1)          # (B, Hq, Tk, D)
+    vr = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), kr.astype(jnp.float32))
+    s = s * scale
+
+    q_idx = jnp.arange(tq)[:, None] + kv_offset   # absolute q positions
+    k_idx = jnp.arange(tk)[None, :]
+    mask = jnp.ones((tq, tk), bool)
+    if causal:
+        mask &= q_idx >= k_idx
+    if window is not None:
+        mask &= (q_idx - k_idx) < window
+    if prefix_len > 0:
+        mask |= k_idx < prefix_len
+    s = jnp.where(mask[None, None], s, NEG_INF)
+
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, vr.astype(jnp.float32))
+    return out.astype(q.dtype)

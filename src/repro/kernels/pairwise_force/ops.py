@@ -1,0 +1,70 @@
+"""jit'd public wrapper for the pairwise-force kernel.
+
+Dispatches between the Pallas kernel (``impl="pallas"``; interpret-mode on
+CPU, Mosaic on TPU) and the pure-jnp oracle (``impl="reference"``).  Handles
+the candidate gather, component-planar layout change, and tile padding so
+callers work with natural (N, 3)/(N, K) shapes.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import kernel as _kernel
+from .ref import pairwise_force_ref
+
+Array = jax.Array
+
+
+def _pad_to(x: Array, axis: int, multiple: int) -> Array:
+    size = x.shape[axis]
+    pad = (-size) % multiple
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "gamma", "impl", "interpret"))
+def pairwise_force(
+    position: Array,   # (N, 3) f32
+    radius: Array,     # (N,) f32
+    cand: Array,       # (N, K) int32 indices into position/radius
+    cand_mask: Array,  # (N, K) bool
+    k: float = 2.0,
+    gamma: float = 1.0,
+    impl: str = "pallas",
+    interpret: bool = True,
+) -> Array:
+    """Net Eq-4.1 force per agent, (N, 3)."""
+    n, kdim = cand.shape
+    safe = jnp.where(cand_mask, cand, 0)
+    cand_pos = jnp.take(position, safe, axis=0)    # (N, K, 3)
+    cand_rad = jnp.take(radius, safe, axis=0)      # (N, K)
+
+    if impl == "reference":
+        return pairwise_force_ref(
+            position, radius, cand_pos, cand_rad, cand_mask, k=k, gamma=gamma
+        )
+
+    tile_n, tile_k = _kernel.TILE_N, _kernel.TILE_K
+    # planar layout + tile padding
+    pos_p = _pad_to(position.T.astype(jnp.float32), 1, tile_n)            # (3, N')
+    rad_p = _pad_to(radius[None, :].astype(jnp.float32), 1, tile_n)       # (1, N')
+    cpos_p = _pad_to(
+        _pad_to(jnp.moveaxis(cand_pos, -1, 0).astype(jnp.float32), 1, tile_n), 2, tile_k
+    )                                                                     # (3, N', K')
+    crad_p = _pad_to(_pad_to(cand_rad[None].astype(jnp.float32), 1, tile_n), 2, tile_k)
+    cmask_p = _pad_to(
+        _pad_to(cand_mask[None].astype(jnp.int8), 1, tile_n), 2, tile_k
+    )
+
+    out = _kernel.pairwise_force_planar(
+        pos_p, rad_p, cpos_p, crad_p, cmask_p,
+        k=k, gamma=gamma, interpret=interpret,
+    )
+    return out[:, :n].T  # (N, 3)

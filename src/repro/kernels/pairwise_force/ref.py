@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for the pairwise contact-force kernel (Eq 4.1)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def pairwise_force_ref(
+    pos: Array,        # (N, 3) f32 query agents
+    rad: Array,        # (N,)   f32
+    cand_pos: Array,   # (N, K, 3) f32 pre-gathered candidate positions
+    cand_rad: Array,   # (N, K) f32
+    cand_mask: Array,  # (N, K) bool
+    k: float = 2.0,
+    gamma: float = 1.0,
+) -> Array:
+    """Net force per query agent: Σ_j  [k·δ − γ√(r̄δ)]⁺ · (x_i − x_j)/|…|."""
+    dx = pos[:, None, :] - cand_pos                      # (N, K, 3)
+    dist = jnp.sqrt(jnp.sum(dx * dx, axis=-1) + 1e-20)   # (N, K)
+    delta = rad[:, None] + cand_rad - dist
+    overlap = (delta > 0.0) & cand_mask
+    rbar = rad[:, None] * cand_rad / jnp.maximum(rad[:, None] + cand_rad, 1e-20)
+    mag = k * delta - gamma * jnp.sqrt(jnp.maximum(rbar * delta, 0.0))
+    f = jnp.where(overlap, mag, 0.0)[..., None] * (dx / dist[..., None])
+    return jnp.sum(f, axis=1)                            # (N, 3)

@@ -1,0 +1,2 @@
+"""rmsnorm kernel package."""
+from . import kernel, ops, ref  # noqa: F401

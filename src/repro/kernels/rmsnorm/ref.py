@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for fused RMSNorm."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def rmsnorm_ref(x: Array, scale: Array, eps: float = 1e-6) -> Array:
+    """y = x * rsqrt(mean(x², axis=-1) + eps) * scale, stats in fp32."""
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(ms + eps) * scale.astype(jnp.float32)
+    return y.astype(x.dtype)

@@ -1,0 +1,85 @@
+"""Fault tolerance + elastic scaling policy (DESIGN.md §5).
+
+This module encodes the cluster-operations contract the framework is built
+around.  On this single-host container the mechanisms are exercised by
+tests (tests/test_checkpoint.py resume-equivalence) and by the train driver
+(kill + rerun); on a real cluster the same functions drive the coordinator.
+
+Failure model & responses
+-------------------------
+1. **Host/device failure mid-step** — the step is a pure function over
+   checkpointed state; the coordinator rebuilds the mesh from surviving
+   hosts (possibly a smaller power-of-two slice), re-shards the latest
+   checkpoint onto it (`reshard_plan`), and resumes.  Stateless-seeded data
+   (batch = f(seed, step)) means no data-pipeline state to recover.
+2. **ABM capacity overflow** — per-device agent pools are fixed-capacity;
+   `DistState.pool.overflow / migrate_overflow / halo_overflow` counters
+   surface saturation *without* corrupting the step.  `check_abm_state`
+   turns them into an `ElasticAction` asking for a capacity re-shard
+   (restore the checkpoint into pools with `grow_factor`× slots).
+3. **Stragglers** — within one SPMD program there are no per-rank
+   stragglers (collectives synchronize); across steps, slow hosts are
+   detected by checkpoint-barrier timing, and the response is mesh
+   reconstruction without that host (same path as failure).  Checkpoint
+   writes are per-host-parallel with a quorum manifest so one slow disk
+   does not stall the fleet.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ElasticAction:
+    kind: str          # "continue" | "grow_capacity" | "rebuild_mesh"
+    reason: str = ""
+    grow_factor: float = 1.0
+
+
+def check_abm_state(pool_overflow: int, migrate_overflow: int,
+                    halo_overflow: int, grow_factor: float = 2.0) -> ElasticAction:
+    """Inspect overflow counters after a run segment (host-side)."""
+    if pool_overflow > 0:
+        return ElasticAction("grow_capacity",
+                             f"agent pool overflowed by {pool_overflow}",
+                             grow_factor)
+    if migrate_overflow > 0 or halo_overflow > 0:
+        return ElasticAction("grow_capacity",
+                             f"exchange buffers overflowed "
+                             f"(migrate {migrate_overflow}, halo {halo_overflow})",
+                             grow_factor)
+    return ElasticAction("continue")
+
+
+def surviving_mesh_shape(n_healthy_hosts: int, devices_per_host: int,
+                         model_parallel: int) -> Optional[Tuple[int, int]]:
+    """Largest (data, model) mesh fitting the surviving devices.
+
+    Keeps the model axis fixed (TP degree is a property of the model
+    sharding) and shrinks the data axis to the largest power of two that
+    fits — the checkpoint re-shards onto it (params are sharded over
+    (data, model); shrinking data only changes the FSDP factor)."""
+    total = n_healthy_hosts * devices_per_host
+    if total < model_parallel:
+        return None
+    data = 1 << int(np.log2(total // model_parallel))
+    return (data, model_parallel)
+
+
+def reshard_plan(old_shape: Tuple[int, int], new_shape: Tuple[int, int]) -> str:
+    """Human-readable plan for re-sharding a checkpoint across mesh sizes.
+
+    npz checkpoints store full (unsharded) arrays, so re-sharding is just
+    loading with the new mesh's NamedShardings; at exascale one would store
+    sharded array files + an index and do a shuffle read — the manifest
+    format (checkpoint/checkpoint.py) leaves room for per-shard entries."""
+    return (
+        f"restore full arrays from latest manifest; "
+        f"device_put with NamedShardings of mesh {new_shape} "
+        f"(was {old_shape}); data-axis batch size rescales by "
+        f"{new_shape[0] / old_shape[0]:.2f}×, lr rescaled accordingly"
+    )

@@ -1,0 +1,77 @@
+"""Batched serving driver: prefill a batch of prompts, then decode.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-1.6b --reduced \
+        --batch 4 --prompt-len 32 --gen 32
+
+Demonstrates the serving path end to end on CPU with reduced configs: the
+prompt is prefilled token-by-token into the cache (the production prefill
+uses the chunked-attention forward; see launch/dryrun.py prefill cells),
+then tokens are sampled greedily with one compiled `decode_step` for all
+positions (dynamic `pos`).
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, reduced_config
+from repro.models.model import build_model
+from repro.models.params import unzip
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="rwkv6-1.6b")
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = reduced_config(args.arch) if args.reduced else get_config(args.arch)
+    model = build_model(cfg)
+    params, _ = unzip(model.init(jax.random.PRNGKey(args.seed)))
+
+    max_seq = args.prompt_len + args.gen
+    cache = model.init_cache(args.batch, max_seq)
+    rng = np.random.default_rng(args.seed)
+    prompt = jnp.asarray(
+        rng.integers(0, cfg.vocab_size, (args.batch, args.prompt_len)), jnp.int32
+    )
+
+    step = jax.jit(model.decode_step)
+
+    t0 = time.time()
+    logits = None
+    for i in range(args.prompt_len):
+        logits, cache = step(params, cache, prompt[:, i : i + 1], jnp.int32(i))
+    t_prefill = time.time() - t0
+
+    generated = []
+    t0 = time.time()
+    tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+    for i in range(args.prompt_len, max_seq):
+        generated.append(np.asarray(tok[:, 0]))
+        logits, cache = step(params, cache, tok, jnp.int32(i))
+        tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+    t_decode = time.time() - t0
+
+    gen = np.stack(generated, axis=1)
+    tps = args.batch * args.gen / t_decode
+    print(f"{cfg.name}: prefill {args.prompt_len} tok in {t_prefill:.2f}s, "
+          f"decoded {args.gen} tok/seq in {t_decode:.2f}s ({tps:.1f} tok/s)")
+    print("sample generations (token ids):")
+    for b in range(min(args.batch, 2)):
+        print(f"  seq{b}: {gen[b][:16].tolist()}")
+    assert np.isfinite(np.asarray(logits)).all()
+    print("serving OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,100 @@
+"""End-to-end training driver with fault tolerance.
+
+    PYTHONPATH=src python -m repro.launch.train \
+        --arch gemma-7b --reduced --steps 200 --ckpt-dir /tmp/run1
+
+Features exercised here (and relied on at cluster scale):
+  * auto-resume: restores the newest valid checkpoint under --ckpt-dir and
+    continues from its step (kill the process mid-run and rerun the same
+    command to see it);
+  * stateless-seeded data: batch(step) is a pure function, so the resumed
+    loss sequence is bitwise identical to an uninterrupted run;
+  * checkpoint-interval bounding: at most --ckpt-every steps of work lost
+    (BioDynaMo §4.3.5 backup-and-restore contract).
+
+The delta-encoded int8 gradient all-reduce (§6.2.3 → DP traffic) lives in
+`repro.optim.compression` (shard_map pure-DP wrapper), validated in
+tests/test_compression.py on an 8-device subprocess mesh.
+
+On CPU this runs the --reduced configs; on a TPU cluster the same driver
+runs the full configs with the production mesh.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import training
+from repro.checkpoint import latest_step, restore, save
+from repro.configs import get_config, reduced_config
+from repro.data import DataConfig, host_batch
+from repro.models.model import build_model
+from repro.optim import adamw
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="gemma-7b")
+    ap.add_argument("--reduced", action="store_true", help="tiny config (CPU)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args(argv)
+
+    cfg = reduced_config(args.arch) if args.reduced else get_config(args.arch)
+    model = build_model(cfg)
+    opt_cfg = adamw.AdamWConfig(
+        learning_rate=args.lr, warmup_steps=20, total_steps=args.steps
+    )
+    data_cfg = DataConfig(seed=args.seed, batch=args.batch, seq_len=args.seq)
+
+    state, _ = training.init_train_state(model, jax.random.PRNGKey(args.seed))
+    n_params = sum(int(x.size) for x in jax.tree.leaves(state.params))
+    print(f"arch={cfg.name} params={n_params/1e6:.2f}M reduced={args.reduced}")
+
+    start_step = 0
+    if args.ckpt_dir and latest_step(args.ckpt_dir) is not None:
+        start_step, state_np = restore(args.ckpt_dir, state)
+        state = jax.tree.map(jnp.asarray, state_np)
+        print(f"resumed from checkpoint step {start_step}")
+
+    step_fn = jax.jit(training.make_train_step(model, opt_cfg), donate_argnums=(0,))
+
+    losses = []
+    t0 = time.time()
+    for step in range(start_step, args.steps):
+        batch = {k: jnp.asarray(v) for k, v in host_batch(data_cfg, cfg, step).items()}
+        state, metrics = step_fn(state, batch)
+        losses.append(float(metrics["loss"]))
+        if step % args.log_every == 0 or step == args.steps - 1:
+            print(
+                f"step {step:5d} loss {float(metrics['loss']):.4f} "
+                f"ce {float(metrics['ce']):.4f} gnorm {float(metrics['grad_norm']):.3f} "
+                f"lr {float(metrics['lr']):.2e} "
+                f"({(time.time()-t0)/max(step-start_step+1,1):.2f}s/step)"
+            )
+        if args.ckpt_dir and (step + 1) % args.ckpt_every == 0:
+            save(args.ckpt_dir, step + 1, jax.tree.map(np.asarray, state))
+            print(f"checkpointed step {step+1}")
+
+    if args.ckpt_dir:
+        save(args.ckpt_dir, args.steps, jax.tree.map(np.asarray, state))
+    first, last = losses[0], np.mean(losses[-5:])
+    print(f"loss {first:.4f} → {last:.4f} over {len(losses)} steps")
+    if len(losses) >= 30:
+        assert last < first, "training did not reduce the loss"
+    return losses
+
+
+if __name__ == "__main__":
+    main()

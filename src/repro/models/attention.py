@@ -1,0 +1,187 @@
+"""Attention blocks: GQA/MQA with RoPE, full / sliding-window / prefix-LM
+masking, flash-style chunked compute for long prefill, and a KV-cache decode
+step with dynamic positions.
+
+Design notes
+------------
+* Train/prefill uses `repro.kernels.flash_attention` — `impl="chunked"` is
+  the pure-JAX online-softmax path that the multi-pod dry-run lowers
+  (O(block²) memory, no T×T materialization at 32k), `impl="pallas"` is the
+  TPU kernel.
+* Decode is a masked einsum over the cache: with one query token the score
+  tensor is (B, H, 1, S) — bandwidth-bound, no flash needed; masking is
+  dynamic in the current position so one compiled program serves all steps.
+* KV-head count < model-parallel degree ⇒ KV tensors replicate over the
+  tensor axis (standard GQA TP practice); q heads shard.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import ops as fa_ops
+
+from .layers import rope
+from .params import normal
+
+Array = jax.Array
+
+NEG_INF = -1e30
+
+
+def attention_init(key, d: int, n_heads: int, n_kv: int, head_dim: int,
+                   dtype=jnp.float32):
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    return {
+        "wq": normal(kq, (d, n_heads, head_dim), 1.0, dtype, ("embed", "heads", "head_dim")),
+        "wk": normal(kk, (d, n_kv, head_dim), 1.0, dtype, ("embed", "kv", "head_dim")),
+        "wv": normal(kv, (d, n_kv, head_dim), 1.0, dtype, ("embed", "kv", "head_dim")),
+        "wo": normal(ko, (n_heads, head_dim, d), 1.0, dtype, ("heads", "head_dim", "embed")),
+    }
+
+
+def _project_qkv(p, x: Array, positions: Optional[Array], theta: float,
+                 compute_dtype) -> Tuple[Array, Array, Array]:
+    xc = x.astype(compute_dtype)
+    q = jnp.einsum("btd,dhk->bthk", xc, p["wq"].astype(compute_dtype))
+    k = jnp.einsum("btd,dhk->bthk", xc, p["wk"].astype(compute_dtype))
+    v = jnp.einsum("btd,dhk->bthk", xc, p["wv"].astype(compute_dtype))
+    if positions is not None:
+        q = rope(q, positions, theta)
+        k = rope(k, positions, theta)
+    return q, k, v
+
+
+def attention_apply(
+    p,
+    x: Array,                       # (B, T, D)
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    prefix_len: int = 0,            # prefix-LM: first P positions bidirectional
+    rope_theta: float = 10000.0,
+    impl: str = "chunked",
+    block_q: int = 512,
+    block_k: int = 1024,
+    compute_dtype=jnp.bfloat16,
+    kv_override: Optional[Tuple[Array, Array]] = None,  # cross-attention
+    unroll: bool = False,
+    context_sharding=None,
+) -> Array:
+    """Full-sequence attention (train / prefill)."""
+    b, t, d = x.shape
+    positions = jnp.arange(t, dtype=jnp.int32)[None, :]
+    use_rope = kv_override is None  # cross-attention is position-free here
+    q, k, v = _project_qkv(
+        p, x, positions if use_rope else None, rope_theta, compute_dtype
+    )
+    if kv_override is not None:
+        k, v = kv_override
+        causal = False
+
+    q = jnp.moveaxis(q, 2, 1)  # (B, H, T, Dh)
+    k = jnp.moveaxis(k, 2, 1)
+    v = jnp.moveaxis(v, 2, 1)
+
+    out = fa_ops.flash_attention(
+        q, k, v, causal=causal, window=window, prefix_len=prefix_len,
+        impl=impl, block_q=block_q, block_k=block_k, unroll=unroll,
+        context_sharding=context_sharding,
+    )
+    out = jnp.moveaxis(out, 1, 2)  # (B, T, H, Dh)
+    return jnp.einsum("bthk,hkd->btd", out.astype(compute_dtype),
+                      p["wo"].astype(compute_dtype))
+
+
+# ------------------------------------------------------------------ decode
+
+def init_kv_cache(batch: int, n_kv: int, max_seq: int, head_dim: int,
+                  dtype=jnp.bfloat16):
+    return {
+        "k": jnp.zeros((batch, n_kv, max_seq, head_dim), dtype),
+        "v": jnp.zeros((batch, n_kv, max_seq, head_dim), dtype),
+    }
+
+
+def attention_decode(
+    p,
+    cache,
+    x: Array,                 # (B, 1, D)
+    pos: Array,               # () int32 — current absolute position
+    *,
+    window: Optional[int] = None,
+    prefix_len: int = 0,
+    rope_theta: float = 10000.0,
+    compute_dtype=jnp.bfloat16,
+    cross: bool = False,      # cross-attention: cache holds encoder KV, no update
+    ring: bool = False,       # sliding-window ring buffer (cache len == window)
+) -> Tuple[Array, dict]:
+    """One decode step: write KV at ``pos``, attend over cache ≤ pos.
+
+    ``ring=True`` (requires ``window`` and a cache of exactly ``window``
+    slots) keeps only the last W tokens — slot i holds absolute position
+    pos − ((pos − i) mod W).  This makes local-attention decode O(window)
+    memory in context length, which is what makes the 500k-context shape
+    feasible for the hybrid archs."""
+    b, _, d = x.shape
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    q, k_new, v_new = _project_qkv(
+        p, x, None if cross else positions, rope_theta, compute_dtype
+    )
+    q = jnp.moveaxis(q, 2, 1)                        # (B, H, 1, Dh)
+
+    if cross:
+        k, v = cache["k"], cache["v"]
+        new_cache = cache
+        s_len = k.shape[2]
+        allowed = jnp.ones((s_len,), bool)
+    elif ring:
+        assert window is not None and cache["k"].shape[2] == window
+        k_new = jnp.moveaxis(k_new, 2, 1)
+        v_new = jnp.moveaxis(v_new, 2, 1)
+        slot = jnp.mod(pos, window)
+        k = jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], k_new.astype(cache["k"].dtype), slot, axis=2
+        )
+        v = jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], v_new.astype(cache["v"].dtype), slot, axis=2
+        )
+        new_cache = {"k": k, "v": v}
+        k_idx = jnp.arange(window)
+        slot_pos = pos - jnp.mod(pos - k_idx, window)
+        allowed = slot_pos >= 0
+    else:
+        k_new = jnp.moveaxis(k_new, 2, 1)            # (B, Hkv, 1, Dh)
+        v_new = jnp.moveaxis(v_new, 2, 1)
+        k = jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], k_new.astype(cache["k"].dtype), pos, axis=2
+        )
+        v = jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], v_new.astype(cache["v"].dtype), pos, axis=2
+        )
+        new_cache = {"k": k, "v": v}
+        s_len = k.shape[2]
+        k_idx = jnp.arange(s_len)
+        allowed = k_idx <= pos
+        if window is not None:
+            in_window = (pos - k_idx) < window
+            if prefix_len > 0:
+                in_window = in_window | (k_idx < prefix_len)
+            allowed = allowed & in_window
+
+    group = q.shape[1] // k.shape[1]
+    kr = jnp.repeat(k, group, axis=1) if group > 1 else k
+    vr = jnp.repeat(v, group, axis=1) if group > 1 else v
+    scale = q.shape[-1] ** -0.5
+    s = jnp.einsum(
+        "bhqd,bhkd->bhqk", q.astype(jnp.float32), kr.astype(jnp.float32)
+    ) * scale
+    s = jnp.where(allowed[None, None, None, :], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", w, vr.astype(jnp.float32))
+    out = jnp.moveaxis(out.astype(compute_dtype), 1, 2)   # (B, 1, H, Dh)
+    y = jnp.einsum("bthk,hkd->btd", out, p["wo"].astype(compute_dtype))
+    return y, new_cache

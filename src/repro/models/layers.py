@@ -1,0 +1,116 @@
+"""Shared neural layers: norms, projections, GLU MLPs, RoPE, embeddings.
+
+Explicit init/apply pairs over Param trees (see params.py).  All matmuls
+cast to the compute dtype (bf16 by default) with fp32 params and fp32
+normalization statistics — the standard mixed-precision training recipe.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .params import Param, normal, ones, zeros
+
+Array = jax.Array
+
+
+# ------------------------------------------------------------------- norms
+
+def norm_init(d: int, kind: str = "rmsnorm", dtype=jnp.float32):
+    if kind == "layernorm":
+        return {"scale": ones((d,), dtype, ("embed",)), "bias": zeros((d,), dtype, ("embed",))}
+    return {"scale": ones((d,), dtype, ("embed",))}
+
+
+def norm_apply(p, x: Array, kind: str = "rmsnorm", eps: float = 1e-6) -> Array:
+    xf = x.astype(jnp.float32)
+    if kind == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+        y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    else:
+        ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + eps) * p["scale"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ------------------------------------------------------------------ linear
+
+def linear_init(key, din: int, dout: int, axes, dtype=jnp.float32, scale=1.0):
+    return {"w": normal(key, (din, dout), scale, dtype, axes)}
+
+
+def linear_apply(p, x: Array, compute_dtype=jnp.bfloat16) -> Array:
+    w = p["w"].astype(compute_dtype)
+    return jnp.einsum("...d,df->...f", x.astype(compute_dtype), w)
+
+
+# ------------------------------------------------------------------- MLPs
+
+def glu_mlp_init(key, d: int, f: int, dtype=jnp.float32, activation: str = "swiglu"):
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {
+        "wi_up": normal(k2, (d, f), 1.0, dtype, ("embed", "mlp")),
+        "wo": normal(k3, (f, d), 1.0, dtype, ("mlp", "embed")),
+    }
+    if activation in ("swiglu", "geglu"):
+        p["wi_gate"] = normal(k1, (d, f), 1.0, dtype, ("embed", "mlp"))
+    return p
+
+
+def glu_mlp_apply(p, x: Array, activation: str = "swiglu", compute_dtype=jnp.bfloat16) -> Array:
+    xc = x.astype(compute_dtype)
+    up = jnp.einsum("...d,df->...f", xc, p["wi_up"].astype(compute_dtype))
+    if activation in ("swiglu", "geglu"):
+        gate = jnp.einsum("...d,df->...f", xc, p["wi_gate"].astype(compute_dtype))
+        act = jax.nn.gelu(gate, approximate=True) if activation == "geglu" else jax.nn.silu(gate)
+        h = act * up
+    else:  # plain gelu/relu two-matrix MLP (whisper)
+        h = jax.nn.gelu(up, approximate=True) if activation == "gelu" else jax.nn.relu(up)
+    return jnp.einsum("...f,fd->...d", h, p["wo"].astype(compute_dtype))
+
+
+# -------------------------------------------------------------------- RoPE
+
+def rope(x: Array, positions: Array, theta: float = 10000.0) -> Array:
+    """Rotary embedding.  x: (..., T, H, Dh); positions: (..., T) absolute."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., :, None].astype(jnp.float32) * freq  # (..., T, half)
+    angles = angles[..., :, None, :]                             # (..., T, 1, half)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+# -------------------------------------------------------------- embeddings
+
+def embedding_init(key, vocab: int, d: int, dtype=jnp.float32):
+    # std = 1/√d: the √d multiplier at the input restores unit variance, and
+    # tied output logits land at O(1) (gemma-style scaled embedding).
+    return {"table": normal(key, (vocab, d), (vocab / d) ** 0.5, dtype, ("vocab", "embed"))}
+
+
+def embed_apply(p, tokens: Array, compute_dtype=jnp.bfloat16) -> Array:
+    return jnp.take(p["table"].astype(compute_dtype), tokens, axis=0)
+
+
+def logits_init(key, d: int, vocab: int, dtype=jnp.float32):
+    return {"w": normal(key, (d, vocab), 1.0, dtype, ("embed", "vocab"))}
+
+
+def logits_apply(p, x: Array, compute_dtype=jnp.bfloat16) -> Array:
+    return jnp.einsum("...d,dv->...v", x.astype(compute_dtype), p["w"].astype(compute_dtype))
+
+
+def tied_logits_apply(embed_params, x: Array, compute_dtype=jnp.bfloat16) -> Array:
+    table = embed_params["table"].astype(compute_dtype)
+    return jnp.einsum("...d,vd->...v", x.astype(compute_dtype), table)

@@ -1,0 +1,535 @@
+"""Model assembly: config → init / forward / loss / cache / decode_step.
+
+Covers every family in the assigned pool with one homogeneous machinery:
+  dense / moe        — pre-norm decoder blocks (attn + GLU-MLP or MoE)
+  ssm (rwkv6)        — time-mix + channel-mix blocks
+  hybrid (rglru)     — Griffin 1:2 pattern (rec, rec, local-attn)
+  audio (whisper)    — encoder (bidirectional) + decoder w/ cross-attention;
+                       conv frontend STUBBED: batch supplies frame embeddings
+  vlm (paligemma)    — prefix-LM decoder; SigLIP STUBBED: batch supplies
+                       patch embeddings
+
+Layer stacking uses ``lax.scan`` over parameter stacks — one *pattern group*
+per scan step (for the 1:2 hybrid the group is three layers), keeping HLO
+size and compile time O(1) in depth.  ``jax.checkpoint`` wraps the scan body
+when ``config.remat`` (full activation rematerialization, the memory-optimal
+default at 4k·256 batch).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+from . import attention as attn
+from . import layers as ll
+from . import moe as moe_mod
+from . import rglru as rglru_mod
+from . import rwkv6 as rwkv_mod
+from .params import Param, is_param, stack_params, unzip
+
+Array = jax.Array
+
+
+def _dtype(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[name]
+
+
+class Model:
+    """Stateless model functions bound to a ModelConfig."""
+
+    def __init__(self, config: ModelConfig):
+        self.cfg = config
+        self.compute_dtype = _dtype(config.dtype)
+        self.param_dtype = _dtype(config.param_dtype)
+        # Optional NamedSharding constraint on the residual stream between
+        # blocks (Megatron-style sequence parallelism): set by the launcher /
+        # dry-run so the per-layer saved activations are seq-sharded.
+        self.residual_sharding = None
+        # Optional context-parallel attention sharding (query-block dim →
+        # tensor axis) — used when n_heads does not divide the model axis.
+        self.context_sharding = None
+        # Optional EP sharding for the MoE dispatch buffer (per-row (E,C,D)
+        # under vmap): pins the experts dim to the tensor axis.
+        self.expert_sharding = None
+        kinds = config.layer_kinds()
+        p = len(config.block_pattern)
+        self.group_size = p
+        if config.scan_layers:
+            self.n_groups = config.n_layers // p
+        else:
+            self.n_groups = 0  # fully unrolled (dry-run cost accounting)
+        self.n_tail = config.n_layers - self.n_groups * p
+        self.tail_kinds = kinds[self.n_groups * p:]
+
+    # ------------------------------------------------------------- init
+
+    def _layer_init(self, key, kind: str):
+        cfg = self.cfg
+        d, f = cfg.d_model, cfg.d_ff
+        k1, k2, k3, k4 = jax.random.split(key, 4)
+        layer: Dict[str, Any] = {"ln1": ll.norm_init(d, cfg.norm)}
+        if kind in ("attn", "local_attn"):
+            layer["attn"] = attn.attention_init(
+                k1, d, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim, self.param_dtype
+            )
+        elif kind == "rwkv6":
+            layer["tmix"] = rwkv_mod.rwkv6_init(
+                k1, d, d // cfg.rnn_head_dim, cfg.rnn_head_dim, dtype=self.param_dtype
+            )
+        elif kind == "rglru":
+            layer["rec"] = rglru_mod.rglru_init(
+                k1, d, cfg.lru_width, cfg.conv1d_width, self.param_dtype
+            )
+        else:
+            raise ValueError(kind)
+
+        layer["ln2"] = ll.norm_init(d, cfg.norm)
+        if kind == "rwkv6":
+            layer["cmix"] = rwkv_mod.rwkv6_channel_init(k2, d, f, self.param_dtype)
+        elif cfg.is_moe and kind in ("attn", "local_attn"):
+            layer["moe"] = moe_mod.moe_init(k2, d, f, cfg.n_experts, self.param_dtype)
+        else:
+            layer["mlp"] = ll.glu_mlp_init(k2, d, f, self.param_dtype, cfg.activation)
+
+        if cfg.is_encoder_decoder and kind in ("attn", "local_attn"):
+            layer["ln_cross"] = ll.norm_init(d, cfg.norm)
+            layer["cross"] = attn.attention_init(
+                k3, d, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim, self.param_dtype
+            )
+        return layer
+
+    def init(self, key) -> Any:
+        """Returns a Param tree (use params.unzip for values + axes)."""
+        cfg = self.cfg
+        keys = jax.random.split(key, cfg.n_layers + 8)
+        tree: Dict[str, Any] = {
+            "embed": ll.embedding_init(keys[-1], cfg.vocab_size, cfg.d_model, self.param_dtype),
+            "ln_f": ll.norm_init(cfg.d_model, cfg.norm),
+        }
+        if not cfg.tie_embeddings:
+            tree["logits"] = ll.logits_init(keys[-2], cfg.d_model, cfg.vocab_size, self.param_dtype)
+
+        kinds = cfg.layer_kinds()
+        groups = []
+        for g in range(self.n_groups):
+            group = {}
+            for j in range(self.group_size):
+                li = g * self.group_size + j
+                group[f"b{j}"] = self._layer_init(keys[li], kinds[li])
+            groups.append(group)
+        if groups:
+            tree["layers"] = stack_params(groups)
+        for j, kind in enumerate(self.tail_kinds):
+            tree[f"tail{j}"] = self._layer_init(keys[self.n_groups * self.group_size + j], kind)
+
+        if cfg.is_encoder_decoder:
+            enc_layers = []
+            ek = jax.random.split(keys[-3], cfg.n_encoder_layers + 1)
+            for e in range(cfg.n_encoder_layers):
+                k1, k2 = jax.random.split(ek[e])
+                enc_layers.append({
+                    "ln1": ll.norm_init(cfg.d_model, cfg.norm),
+                    "attn": attn.attention_init(
+                        k1, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim,
+                        self.param_dtype,
+                    ),
+                    "ln2": ll.norm_init(cfg.d_model, cfg.norm),
+                    "mlp": ll.glu_mlp_init(k2, cfg.d_model, cfg.d_ff, self.param_dtype, cfg.activation),
+                })
+            tree["encoder"] = {
+                "layers": stack_params(enc_layers),
+                "pos_embed": Param(
+                    jax.random.normal(ek[-1], (cfg.encoder_seq, cfg.d_model),
+                                      self.param_dtype) * 0.02,
+                    (None, "embed"),
+                ),
+                "ln_f": ll.norm_init(cfg.d_model, cfg.norm),
+            }
+        return tree
+
+    # ---------------------------------------------------------- forward
+
+    def _block_forward(self, lp, kind: str, x: Array, enc_out: Optional[Array],
+                       prefix_len: int) -> Tuple[Array, Array]:
+        """One block (pre-norm residual).  Returns (x', aux_loss)."""
+        cfg = self.cfg
+        aux = jnp.zeros((), jnp.float32)
+        h = ll.norm_apply(lp["ln1"], x, cfg.norm)
+        if kind in ("attn", "local_attn"):
+            window = cfg.window if kind == "local_attn" else None
+            a = attn.attention_apply(
+                lp["attn"], h,
+                causal=True,
+                window=window,
+                prefix_len=prefix_len,
+                rope_theta=cfg.rope_theta,
+                impl=cfg.attention_impl,
+                block_q=cfg.attention_block_q,
+                block_k=cfg.attention_block_k,
+                compute_dtype=self.compute_dtype,
+                unroll=cfg.unroll_inner_scans,
+                context_sharding=self.context_sharding,
+            )
+            x = x + a
+            if cfg.is_encoder_decoder and enc_out is not None:
+                hc = ll.norm_apply(lp["ln_cross"], x, cfg.norm)
+                kv = self._encoder_kv(lp["cross"], enc_out)
+                c = attn.attention_apply(
+                    lp["cross"], hc, causal=False,
+                    rope_theta=cfg.rope_theta,
+                    impl=cfg.attention_impl,
+                    block_q=cfg.attention_block_q,
+                    block_k=cfg.attention_block_k,
+                    compute_dtype=self.compute_dtype,
+                    kv_override=kv,
+                    unroll=cfg.unroll_inner_scans,
+                )
+                x = x + c
+        elif kind == "rwkv6":
+            a, _ = rwkv_mod.rwkv6_time_mix(
+                lp["tmix"], h, self.cfg.d_model // cfg.rnn_head_dim, cfg.rnn_head_dim,
+                chunk=cfg.rwkv_chunk, impl="chunked", compute_dtype=self.compute_dtype,
+                unroll=cfg.unroll_inner_scans,
+            )
+            x = x + a
+        elif kind == "rglru":
+            a, _ = rglru_mod.rglru_block_apply(
+                lp["rec"], h, compute_dtype=self.compute_dtype
+            )
+            x = x + a
+
+        h2 = ll.norm_apply(lp["ln2"], x, cfg.norm)
+        if kind == "rwkv6":
+            m, _ = rwkv_mod.rwkv6_channel_mix(lp["cmix"], h2, compute_dtype=self.compute_dtype)
+        elif cfg.is_moe and kind in ("attn", "local_attn"):
+            m, aux = moe_mod.moe_apply(
+                lp["moe"], h2,
+                top_k=cfg.top_k, n_experts=cfg.n_experts,
+                capacity_factor=cfg.capacity_factor,
+                activation=cfg.activation,
+                token_sort=cfg.moe_token_sort,
+                compute_dtype=self.compute_dtype,
+                dispatch_sharding=self.expert_sharding,
+            )
+        else:
+            m = ll.glu_mlp_apply(lp["mlp"], h2, cfg.activation, self.compute_dtype)
+        return x + m, aux
+
+    def _encoder_kv(self, cross_p, enc_out: Array) -> Tuple[Array, Array]:
+        # (B, S, Hkv, Dh) — attention_apply's own moveaxis brings heads forward
+        cd = self.compute_dtype
+        k = jnp.einsum("bsd,dhk->bshk", enc_out.astype(cd), cross_p["wk"].astype(cd))
+        v = jnp.einsum("bsd,dhk->bshk", enc_out.astype(cd), cross_p["wv"].astype(cd))
+        return k, v
+
+    def _group_forward(self, gp, x: Array, enc_out, prefix_len) -> Tuple[Array, Array]:
+        cfg = self.cfg
+        aux = jnp.zeros((), jnp.float32)
+        for j in range(self.group_size):
+            kind = cfg.block_pattern[j]
+            x, a = self._block_forward(gp[f"b{j}"], kind, x, enc_out, prefix_len)
+            aux = aux + a
+        return x, aux
+
+    def encode(self, params, frames: Array) -> Array:
+        """Whisper encoder over precomputed (stub) frame embeddings."""
+        cfg = self.cfg
+        ep = params["encoder"]
+        x = frames.astype(self.compute_dtype)
+        x = x + ep["pos_embed"][None, : x.shape[1]].astype(self.compute_dtype)
+
+        def body(h, lp):
+            a = attn.attention_apply(
+                lp["attn"], ll.norm_apply(lp["ln1"], h, cfg.norm),
+                causal=False, rope_theta=cfg.rope_theta,
+                impl=cfg.attention_impl,
+                block_q=cfg.attention_block_q, block_k=cfg.attention_block_k,
+                compute_dtype=self.compute_dtype,
+            )
+            h = h + a
+            m = ll.glu_mlp_apply(
+                lp["mlp"], ll.norm_apply(lp["ln2"], h, cfg.norm),
+                cfg.activation, self.compute_dtype,
+            )
+            return h + m, None
+
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        if cfg.scan_layers:
+            x, _ = jax.lax.scan(body, x, ep["layers"])
+        else:
+            for e in range(cfg.n_encoder_layers):
+                x, _ = body(x, jax.tree.map(lambda a: a[e], ep["layers"]))
+        return ll.norm_apply(ep["ln_f"], x, cfg.norm)
+
+    def backbone(self, params, batch: Dict[str, Array]) -> Tuple[Array, Array]:
+        """Final-norm hidden states (B, T, D) + MoE aux loss."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        x = ll.embed_apply(params["embed"], tokens, self.compute_dtype)
+        x = x * jnp.asarray(cfg.d_model ** 0.5, self.compute_dtype)
+
+        prefix_len = 0
+        if cfg.family == "vlm":
+            patches = batch["patches"].astype(self.compute_dtype)  # (B, P, D)
+            x = jnp.concatenate([patches, x], axis=1)
+            prefix_len = cfg.prefix_tokens
+
+        enc_out = None
+        if cfg.is_encoder_decoder:
+            enc_out = self.encode(params, batch["frames"])
+
+        def body(carry, gp):
+            h, aux = carry
+            if self.residual_sharding is not None:
+                h = jax.lax.with_sharding_constraint(h, self.residual_sharding)
+            h, a = self._group_forward(gp, h, enc_out, prefix_len)
+            if self.residual_sharding is not None:
+                h = jax.lax.with_sharding_constraint(h, self.residual_sharding)
+            return (h, aux + a), None
+
+        if cfg.remat:
+            if cfg.remat_policy == "dots":
+                body = jax.checkpoint(
+                    body,
+                    policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+                )
+            else:
+                body = jax.checkpoint(body)
+        aux0 = jnp.zeros((), jnp.float32)
+        if self.n_groups:
+            (x, aux), _ = jax.lax.scan(body, (x, aux0), params["layers"])
+        else:
+            aux = aux0
+        for j, kind in enumerate(self.tail_kinds):
+            x, a = self._block_forward(params[f"tail{j}"], kind, x, enc_out, prefix_len)
+            aux = aux + a
+
+        x = ll.norm_apply(params["ln_f"], x, cfg.norm)
+        if prefix_len > 0:
+            x = x[:, prefix_len:]
+        return x, aux
+
+    def forward(self, params, batch: Dict[str, Array]) -> Tuple[Array, Array]:
+        """Teacher-forced logits (B, T, V) — small-scale / test path; the
+        training loss uses the sequence-chunked path below instead."""
+        x, aux = self.backbone(params, batch)
+        if self.cfg.tie_embeddings:
+            logits = ll.tied_logits_apply(params["embed"], x, self.compute_dtype)
+        else:
+            logits = ll.logits_apply(params["logits"], x, self.compute_dtype)
+        return logits.astype(jnp.float32), aux
+
+    # ------------------------------------------------------------- loss
+
+    LOSS_CHUNK = 8192  # tokens per logits chunk
+
+    def loss(self, params, batch: Dict[str, Array]) -> Tuple[Array, Dict[str, Array]]:
+        """Masked softmax cross-entropy + z-loss + MoE aux.
+
+        The (tokens, vocab) logits tensor is never fully materialized: the
+        vocabulary projection and log-softmax run over sequence chunks under
+        a rematerialized scan (a 1M-token × 256k-vocab batch would otherwise
+        be a petabyte of logits)."""
+        x, aux = self.backbone(params, batch)
+        targets = batch["targets"]
+        b, t, d = x.shape
+        n = b * t
+        xf = x.reshape(n, d)
+        tf = targets.reshape(n)
+
+        chunk = min(self.LOSS_CHUNK, n)
+        pad = (-n) % chunk
+        if pad:
+            xf = jnp.pad(xf, ((0, pad), (0, 0)))
+            tf = jnp.pad(tf, (0, pad), constant_values=-1)
+        n_chunks = (n + pad) // chunk
+        xc = xf.reshape(n_chunks, chunk, d)
+        tc = tf.reshape(n_chunks, chunk)
+
+        if self.cfg.tie_embeddings:
+            w = params["embed"]["table"].astype(self.compute_dtype).T
+        else:
+            w = params["logits"]["w"].astype(self.compute_dtype)
+
+        def chunk_loss(carry, xs):
+            ce_sum, z_sum, tok = carry
+            xch, tch = xs
+            logits = (xch.astype(self.compute_dtype) @ w).astype(jnp.float32)
+            mask = (tch >= 0).astype(jnp.float32)
+            safe_t = jnp.maximum(tch, 0)
+            lse = jax.nn.logsumexp(logits, axis=-1)
+            picked = jnp.take_along_axis(logits, safe_t[:, None], axis=-1)[:, 0]
+            nll = lse - picked
+            ce_sum = ce_sum + (nll * mask).sum()
+            z_sum = z_sum + ((lse ** 2) * mask).sum()
+            return (ce_sum, z_sum, tok + mask.sum()), None
+
+        body = jax.checkpoint(chunk_loss) if self.cfg.remat else chunk_loss
+        init = (jnp.zeros(()), jnp.zeros(()), jnp.zeros(()))
+        if self.cfg.unroll_inner_scans:
+            carry = init
+            for i in range(n_chunks):
+                carry, _ = body(carry, (xc[i], tc[i]))
+            ce_sum, z_sum, tok = carry
+        else:
+            (ce_sum, z_sum, tok), _ = jax.lax.scan(body, init, (xc, tc))
+        denom = jnp.maximum(tok, 1.0)
+        ce = ce_sum / denom
+        zl = 1e-4 * z_sum / denom
+        total = ce + zl + 1e-2 * aux
+        return total, {"ce": ce, "aux": aux, "zloss": zl, "tokens": tok}
+
+    # ------------------------------------------------------------ decode
+
+    def init_cache(self, batch: int, max_seq: int, enc_out: Optional[Array] = None):
+        """Decode cache pytree, grouped to mirror the scanned layer stack."""
+        cfg = self.cfg
+        kinds = cfg.layer_kinds()
+
+        def one(kind):
+            c: Dict[str, Any] = {}
+            if kind in ("attn", "local_attn"):
+                # local attention uses a ring buffer of exactly `window`
+                # slots — O(window) memory regardless of context length,
+                # which is what makes long_500k feasible for the hybrids.
+                s = max_seq
+                if kind == "local_attn" and cfg.window is not None:
+                    s = min(max_seq, cfg.window)
+                c["kv"] = attn.init_kv_cache(
+                    batch, cfg.n_kv_heads, s, cfg.head_dim, self.compute_dtype
+                )
+                if cfg.is_encoder_decoder:
+                    c["cross_kv"] = attn.init_kv_cache(
+                        batch, cfg.n_kv_heads, cfg.encoder_seq, cfg.head_dim,
+                        self.compute_dtype,
+                    )
+            elif kind == "rwkv6":
+                h = cfg.d_model // cfg.rnn_head_dim
+                c["rwkv"] = (
+                    jnp.zeros((batch, cfg.d_model), self.compute_dtype),
+                    jnp.zeros((batch, h, cfg.rnn_head_dim, cfg.rnn_head_dim), jnp.float32),
+                )
+                c["cmix_prev"] = jnp.zeros((batch, cfg.d_model), self.compute_dtype)
+            elif kind == "rglru":
+                c["rglru"] = rglru_mod.rglru_init_state(
+                    batch, cfg.lru_width, cfg.conv1d_width, self.compute_dtype
+                )
+            return c
+
+        groups = []
+        for g in range(self.n_groups):
+            groups.append({
+                f"b{j}": one(kinds[g * self.group_size + j])
+                for j in range(self.group_size)
+            })
+        cache: Dict[str, Any] = {}
+        if groups:
+            cache["layers"] = jax.tree.map(lambda *xs: jnp.stack(xs), *groups)
+        for j, kind in enumerate(self.tail_kinds):
+            cache[f"tail{j}"] = one(kind)
+        return cache
+
+    def _block_decode(self, lp, kind: str, c, x: Array, pos: Array,
+                      prefix_len: int):
+        cfg = self.cfg
+        h = ll.norm_apply(lp["ln1"], x, cfg.norm)
+        if kind in ("attn", "local_attn"):
+            window = cfg.window if kind == "local_attn" else None
+            ring = (
+                kind == "local_attn"
+                and window is not None
+                and c["kv"]["k"].shape[2] == window
+            )
+            a, c["kv"] = attn.attention_decode(
+                lp["attn"], c["kv"], h, pos,
+                window=window, prefix_len=prefix_len, ring=ring,
+                rope_theta=cfg.rope_theta, compute_dtype=self.compute_dtype,
+            )
+            x = x + a
+            if cfg.is_encoder_decoder:
+                hc = ll.norm_apply(lp["ln_cross"], x, cfg.norm)
+                a2, _ = attn.attention_decode(
+                    lp["cross"], c["cross_kv"], hc, pos,
+                    rope_theta=cfg.rope_theta, compute_dtype=self.compute_dtype,
+                    cross=True,
+                )
+                x = x + a2
+        elif kind == "rwkv6":
+            a, c["rwkv"] = rwkv_mod.rwkv6_decode_step(
+                lp["tmix"], h, c["rwkv"],
+                cfg.d_model // cfg.rnn_head_dim, cfg.rnn_head_dim,
+                compute_dtype=self.compute_dtype,
+            )
+            x = x + a
+        elif kind == "rglru":
+            a, c["rglru"] = rglru_mod.rglru_decode_step(
+                lp["rec"], h, c["rglru"], compute_dtype=self.compute_dtype
+            )
+            x = x + a
+
+        h2 = ll.norm_apply(lp["ln2"], x, cfg.norm)
+        if kind == "rwkv6":
+            m, c["cmix_prev"] = rwkv_mod.rwkv6_channel_mix(
+                lp["cmix"], h2, state=c["cmix_prev"], compute_dtype=self.compute_dtype
+            )
+        elif cfg.is_moe and kind in ("attn", "local_attn"):
+            m, _ = moe_mod.moe_apply(
+                lp["moe"], h2, top_k=cfg.top_k, n_experts=cfg.n_experts,
+                capacity_factor=4.0,  # decode: tiny token count, don't drop
+                activation=cfg.activation, token_sort=cfg.moe_token_sort,
+                compute_dtype=self.compute_dtype,
+            )
+        else:
+            m = ll.glu_mlp_apply(lp["mlp"], h2, cfg.activation, self.compute_dtype)
+        return x + m, c
+
+    def decode_step(self, params, cache, tokens: Array, pos: Array):
+        """One token for every sequence in the batch.
+
+        tokens: (B, 1) int32;  pos: () int32 current absolute position.
+        Returns (logits (B, 1, V), cache')."""
+        cfg = self.cfg
+        x = ll.embed_apply(params["embed"], tokens, self.compute_dtype)
+        x = x * jnp.asarray(cfg.d_model ** 0.5, self.compute_dtype)
+        prefix_len = cfg.prefix_tokens if cfg.family == "vlm" else 0
+        dec_pos = pos + prefix_len
+
+        def body(carry, xs):
+            h = carry
+            gp, gc = xs
+            new_gc = {}
+            for j in range(self.group_size):
+                kind = cfg.block_pattern[j]
+                h, new_gc[f"b{j}"] = self._block_decode(
+                    gp[f"b{j}"], kind, dict(gc[f"b{j}"]), h, dec_pos, prefix_len
+                )
+            return h, new_gc
+
+        new_cache: Dict[str, Any] = {}
+        if self.n_groups:
+            x, new_cache["layers"] = jax.lax.scan(
+                body, x, (params["layers"], cache["layers"])
+            )
+        for j, kind in enumerate(self.tail_kinds):
+            x, new_cache[f"tail{j}"] = self._block_decode(
+                params[f"tail{j}"], kind, dict(cache[f"tail{j}"]), x, dec_pos, prefix_len
+            )
+
+        x = ll.norm_apply(params["ln_f"], x, cfg.norm)
+        if cfg.tie_embeddings:
+            logits = ll.tied_logits_apply(params["embed"], x, self.compute_dtype)
+        else:
+            logits = ll.logits_apply(params["logits"], x, self.compute_dtype)
+        return logits.astype(jnp.float32), new_cache
+
+
+def build_model(config: ModelConfig) -> Model:
+    return Model(config)

@@ -1,0 +1,177 @@
+"""Mixture-of-Experts FFN with token-sorted dispatch.
+
+Router: softmax top-k (GShard/Mixtral style), normalized combine weights.
+
+Dispatch is the paper's §5.4.2 insight applied to MoE: assignments are
+*sorted by expert id* before the gather, so each expert's tokens form a
+contiguous run — the exact analogue of sorting agents along the space-
+filling curve so each grid cell's agents are contiguous.  The rank-within-
+run computation is the same primitive as `core.grid.build_index_arrays`.
+Contiguous runs mean the (E, C, D) dispatch gather reads near-sequential
+memory and the expert einsum hits the MXU with dense blocks; with experts
+sharded over the tensor axis the dispatch becomes a single all-to-all.
+
+Capacity: C = ceil(T·k/E · capacity_factor); overflow tokens are dropped
+from the expert (combine weight renormalizes over surviving assignments),
+matching standard capacity-factor semantics.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .params import normal
+
+Array = jax.Array
+
+
+def moe_init(key, d: int, f: int, n_experts: int, dtype=jnp.float32):
+    kr, kg, ku, ko = jax.random.split(key, 4)
+    return {
+        "router": normal(kr, (d, n_experts), 1.0, dtype, ("embed", None)),
+        "wi_gate": normal(kg, (n_experts, d, f), 1.0, dtype, ("experts", "embed", "mlp")),
+        "wi_up": normal(ku, (n_experts, d, f), 1.0, dtype, ("experts", "embed", "mlp")),
+        "wo": normal(ko, (n_experts, f, d), 1.0, dtype, ("experts", "mlp", "embed")),
+    }
+
+
+def _ranks_in_runs(sorted_ids: Array) -> Array:
+    """Rank of each element within its equal-value run (ids must be sorted)."""
+    n = sorted_ids.shape[0]
+    pos = jnp.arange(n, dtype=jnp.int32)
+    is_start = jnp.concatenate(
+        [jnp.ones((1,), bool), sorted_ids[1:] != sorted_ids[:-1]]
+    )
+    run_start = jax.lax.cummax(jnp.where(is_start, pos, -1))
+    return pos - run_start
+
+
+def _dispatch_combine_row(
+    xf: Array,             # (T, D) one batch row
+    expert_ids: Array,     # (T, k)
+    gate_vals: Array,      # (T, k)
+    wg: Array, wu: Array, wo: Array,
+    *,
+    top_k: int,
+    n_experts: int,
+    capacity: int,
+    activation: str,
+    token_sort: bool,
+    compute_dtype,
+    dispatch_sharding=None,
+) -> Array:
+    """Row-local dispatch → expert einsum → combine.
+
+    Row-locality is the GSPMD-friendly formulation: the data-dependent sort/
+    scatter stays inside one batch shard (vmapped over B, parallel across
+    the data axis); only the dense expert einsums touch the expert-sharded
+    weights, so the partitioner emits one all-to-all-style exchange for the
+    (B, E, C, D) buffer instead of resharding global gathers."""
+    t, d = xf.shape
+    n_assign = t * top_k
+    flat_expert = expert_ids.reshape(n_assign)
+    flat_token = jnp.repeat(jnp.arange(t, dtype=jnp.int32), top_k)
+    flat_gate = gate_vals.reshape(n_assign)
+
+    if token_sort:
+        order = jnp.argsort(flat_expert, stable=True)          # the Morton sort
+        s_expert = flat_expert[order]
+        s_token = flat_token[order]
+        s_gate = flat_gate[order]
+        rank = _ranks_in_runs(s_expert)                        # contiguous runs
+    else:
+        # unsorted baseline (ablation): rank via one-hot cumsum, O(T·E) memory
+        onehot = jax.nn.one_hot(flat_expert, n_experts, dtype=jnp.int32)
+        rank = (jnp.cumsum(onehot, axis=0) - onehot)[
+            jnp.arange(n_assign), flat_expert
+        ]
+        s_expert, s_token, s_gate = flat_expert, flat_token, flat_gate
+
+    keep = rank < capacity
+    # 2-D (expert, rank) scatter — keeps the expert dim intact so the
+    # partitioner can shard the dispatch buffer over the experts axis (the
+    # flattened E·C form would force a replicated buffer).
+    rank_c = jnp.where(keep, rank, capacity)  # overflow → garbage column
+    buf = jnp.zeros((n_experts, capacity + 1, d), compute_dtype)
+    buf = buf.at[s_expert, rank_c].set(
+        xf.astype(compute_dtype)[s_token], mode="drop"
+    )[:, :capacity]
+    if dispatch_sharding is not None:
+        # Pin the buffer's expert dim to the tensor axis so the expert
+        # einsums (and their weight-gradient einsums in the backward) stay
+        # expert-sharded — without this the partitioner replicates the
+        # buffer and all-reduces *unsharded* expert gradients (§Perf log).
+        buf = jax.lax.with_sharding_constraint(buf, dispatch_sharding)
+
+    gate = jnp.einsum("ecd,edf->ecf", buf, wg)
+    up = jnp.einsum("ecd,edf->ecf", buf, wu)
+    act = (
+        jax.nn.gelu(gate, approximate=True)
+        if activation == "geglu"
+        else jax.nn.silu(gate)
+    )
+    expert_out = jnp.einsum("ecf,efd->ecd", act * up, wo)      # (E, C, D)
+    if dispatch_sharding is not None:
+        expert_out = jax.lax.with_sharding_constraint(expert_out, dispatch_sharding)
+
+    rank_g = jnp.where(keep, rank, 0)
+    gathered = expert_out[s_expert, rank_g]                    # (T·k, D)
+    contrib = jnp.where(
+        keep[:, None], gathered * s_gate[:, None].astype(compute_dtype), 0.0
+    )
+    return jnp.zeros((t, d), compute_dtype).at[s_token].add(contrib)
+
+
+def moe_apply(
+    p,
+    x: Array,                    # (B, T, D)
+    *,
+    top_k: int,
+    n_experts: int,
+    capacity_factor: float = 1.25,
+    activation: str = "swiglu",
+    token_sort: bool = True,
+    compute_dtype=jnp.bfloat16,
+    dispatch_sharding=None,      # NamedSharding for (B, E, C, D) buffers (EP)
+) -> Tuple[Array, Array]:
+    """Returns (output (B,T,D), aux_loss ())."""
+    b, t, d = x.shape
+
+    logits = jnp.einsum(
+        "btd,de->bte", x.astype(jnp.float32), p["router"].astype(jnp.float32)
+    )
+    probs = jax.nn.softmax(logits, axis=-1)                    # (B, T, E)
+    gate_vals, expert_ids = jax.lax.top_k(probs, top_k)        # (B, T, k)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    # Load-balancing auxiliary loss (Switch §2.2), over all tokens.
+    me = jnp.mean(probs, axis=(0, 1))
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(expert_ids, n_experts), axis=2), axis=(0, 1)
+    )
+    aux_loss = n_experts * jnp.sum(me * ce)
+
+    capacity = int(max(1, -(-t * top_k // n_experts) * capacity_factor))
+    wg = p["wi_gate"].astype(compute_dtype)
+    wu = p["wi_up"].astype(compute_dtype)
+    wo = p["wo"].astype(compute_dtype)
+
+    row = functools.partial(
+        _dispatch_combine_row,
+        top_k=top_k,
+        n_experts=n_experts,
+        capacity=capacity,
+        activation=activation,
+        token_sort=token_sort,
+        compute_dtype=compute_dtype,
+        dispatch_sharding=dispatch_sharding,
+    )
+    out = jax.vmap(lambda xr, er, gr: row(xr, er, gr, wg, wu, wo))(
+        x, expert_ids, gate_vals
+    )
+    return out, aux_loss

@@ -1,0 +1,79 @@
+"""Parameter trees with logical sharding axes.
+
+Init functions build nested dicts whose leaves are :class:`Param` — an array
+plus a tuple of *logical axis names* (one per array dim).  ``unzip`` splits
+the tree into (values, axes); `repro.sharding` maps logical names to mesh
+axes.  This gives MaxText-style logical-axis sharding without a framework
+dependency.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+# Logical axis vocabulary (see repro/sharding.py for the mesh mapping):
+#   "embed"   — d_model dims
+#   "mlp"     — d_ff dims
+#   "heads"   — attention head count dims (q)
+#   "kv"      — kv head count dims
+#   "head_dim"— per-head feature dim
+#   "vocab"   — vocabulary dim
+#   "experts" — MoE expert dim
+#   "layers"  — stacked-scan layer dim
+#   None      — replicated
+
+
+@dataclasses.dataclass
+class Param:
+    value: Any  # Array | ShapeDtypeStruct
+    axes: Tuple[Optional[str], ...]
+
+
+def is_param(x: Any) -> bool:
+    return isinstance(x, Param)
+
+
+def normal(key, shape, scale, dtype, axes) -> Param:
+    fan_in = shape[0] if len(shape) > 1 else 1
+    std = scale / max(fan_in, 1) ** 0.5
+    return Param(jax.random.normal(key, shape, dtype) * std, axes)
+
+
+def zeros(shape, dtype, axes) -> Param:
+    return Param(jnp.zeros(shape, dtype), axes)
+
+
+def ones(shape, dtype, axes) -> Param:
+    return Param(jnp.ones(shape, dtype), axes)
+
+
+def const(value, axes) -> Param:
+    return Param(value, axes)
+
+
+def unzip(tree) -> Tuple[Any, Any]:
+    """Split a Param tree into (values, axes) trees of identical structure."""
+    values = jax.tree.map(lambda p: p.value, tree, is_leaf=is_param)
+    axes = jax.tree.map(lambda p: p.axes, tree, is_leaf=is_param)
+    return values, axes
+
+
+def tree_size(values) -> int:
+    return sum(int(x.size) for x in jax.tree.leaves(values))
+
+
+def stack_params(param_list) -> Any:
+    """Stack per-layer Param trees along a new leading "layers" axis."""
+
+    def _stack(*ps: Param) -> Param:
+        return Param(
+            jnp.stack([p.value for p in ps]), ("layers",) + ps[0].axes
+        )
+
+    return jax.tree.map(_stack, *param_list, is_leaf=is_param)

@@ -1,0 +1,138 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+Block structure (the Griffin "recurrent block"):
+
+    y = W_out · ( GeLU(W_gate x) ⊙ RG-LRU( Conv1D_w( W_in x ) ) )
+
+RG-LRU (per channel, diagonal — a gated linear recurrence):
+
+    r_t = σ(W_a x_t + b_a)           recurrence gate
+    i_t = σ(W_x x_t + b_x)           input gate
+    a_t = a^{c·r_t},  a = σ(Λ)       (c = 8)
+    h_t = a_t ⊙ h_{t−1} + √(1 − a_t²) ⊙ (i_t ⊙ x_t)
+
+First-order diagonal recurrence ⇒ ``jax.lax.associative_scan`` over time
+(log-depth on TPU), O(1)-state decode.  The temporal Conv1D (width 4) keeps
+a (width−1)-token tail as decode state.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .params import normal, zeros, const
+
+Array = jax.Array
+
+_C_EXPONENT = 8.0
+
+
+class RGLRUState(NamedTuple):
+    h: Array          # (B, W) recurrence state
+    conv_tail: Array  # (B, width−1, W) conv1d history
+
+
+def rglru_init(key, d: int, width: int, conv_width: int = 4, dtype=jnp.float32):
+    ks = jax.random.split(key, 6)
+    w = width
+    # Λ init so a ∈ (0.9, 0.999) as in the paper
+    lam = jnp.log(jnp.exp(jnp.linspace(4.0, 9.0, w)) - 1.0) / _C_EXPONENT
+    return {
+        "w_in": normal(ks[0], (d, w), 1.0, dtype, ("embed", "mlp")),
+        "w_gate": normal(ks[1], (d, w), 1.0, dtype, ("embed", "mlp")),
+        "w_out": normal(ks[2], (w, d), 1.0, dtype, ("mlp", "embed")),
+        "conv_w": normal(ks[3], (conv_width, w), 1.0, dtype, (None, "mlp")),
+        "wa": normal(ks[4], (w, w), 1.0, dtype, ("mlp", "mlp_out")),
+        "ba": zeros((w,), dtype, ("mlp",)),
+        "wx": normal(ks[5], (w, w), 1.0, dtype, ("mlp", "mlp_out")),
+        "bx": zeros((w,), dtype, ("mlp",)),
+        "lam": const(lam.astype(dtype), ("mlp",)),
+    }
+
+
+def _conv1d_causal(p, x: Array, tail: Optional[Array], compute_dtype) -> Tuple[Array, Array]:
+    """Depthwise causal conv along time.  x: (B, T, W)."""
+    w = p["conv_w"].astype(compute_dtype)          # (K, W)
+    kw = w.shape[0]
+    b, t, width = x.shape
+    if tail is None:
+        tail = jnp.zeros((b, kw - 1, width), x.dtype)
+    xp = jnp.concatenate([tail, x], axis=1)        # (B, T+K−1, W)
+    out = jnp.zeros_like(x)
+    for i in range(kw):
+        out = out + xp[:, i : i + t, :] * w[i]
+    new_tail = xp[:, -(kw - 1):, :]
+    return out, new_tail
+
+
+def _rglru_gates(p, u: Array) -> Tuple[Array, Array]:
+    """log a_t (≤0) and gated input, fp32."""
+    uf = u.astype(jnp.float32)
+    r = jax.nn.sigmoid(
+        jnp.einsum("...w,wv->...v", uf, p["wa"].astype(jnp.float32))
+        + p["ba"].astype(jnp.float32)
+    )
+    i = jax.nn.sigmoid(
+        jnp.einsum("...w,wv->...v", uf, p["wx"].astype(jnp.float32))
+        + p["bx"].astype(jnp.float32)
+    )
+    log_a_base = -_C_EXPONENT * jax.nn.softplus(p["lam"].astype(jnp.float32))
+    log_a = log_a_base * r                          # (B, T, W), ≤ 0
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (i * uf)
+    return a, gated
+
+
+def rglru_scan(p, u: Array, h0: Optional[Array] = None) -> Tuple[Array, Array]:
+    """Full-sequence RG-LRU via associative scan.  u: (B, T, W) → (h_seq, h_T)."""
+    a, x = _rglru_gates(p, u)                       # fp32
+
+    if h0 is not None:
+        # fold the carry state in as a virtual step 0 contribution
+        x = x.at[:, 0, :].add(a[:, 0, :] * h0.astype(jnp.float32))
+
+    def combine(left, right):
+        a1, x1 = left
+        a2, x2 = right
+        return a1 * a2, x2 + a2 * x1
+
+    a_s, h = jax.lax.associative_scan(combine, (a, x), axis=1)
+    return h.astype(u.dtype), h[:, -1, :]
+
+
+def rglru_block_apply(
+    p,
+    x: Array,                      # (B, T, D)
+    state: Optional[RGLRUState] = None,
+    compute_dtype=jnp.bfloat16,
+) -> Tuple[Array, RGLRUState]:
+    """The full Griffin recurrent block (proj → conv → RG-LRU → gate → out)."""
+    xc = x.astype(compute_dtype)
+    u = jnp.einsum("btd,dw->btw", xc, p["w_in"].astype(compute_dtype))
+    gate = jax.nn.gelu(
+        jnp.einsum("btd,dw->btw", xc, p["w_gate"].astype(compute_dtype)),
+        approximate=True,
+    )
+    u, new_tail = _conv1d_causal(p, u, state.conv_tail if state else None, compute_dtype)
+    h_seq, h_last = rglru_scan(p, u, h0=state.h if state else None)
+    y = (h_seq.astype(compute_dtype) * gate)
+    out = jnp.einsum("btw,wd->btd", y, p["w_out"].astype(compute_dtype))
+    new_state = RGLRUState(h=h_last, conv_tail=new_tail)
+    return out, new_state
+
+
+def rglru_init_state(batch: int, width: int, conv_width: int = 4,
+                     dtype=jnp.bfloat16) -> RGLRUState:
+    return RGLRUState(
+        h=jnp.zeros((batch, width), jnp.float32),
+        conv_tail=jnp.zeros((batch, conv_width - 1, width), dtype),
+    )
+
+
+def rglru_decode_step(p, x: Array, state: RGLRUState,
+                      compute_dtype=jnp.bfloat16) -> Tuple[Array, RGLRUState]:
+    """One-token step (T = 1) — O(1) in context length."""
+    return rglru_block_apply(p, x, state=state, compute_dtype=compute_dtype)

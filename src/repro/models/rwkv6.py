@@ -1,0 +1,260 @@
+"""RWKV-6 "Finch" block: attention-free time mixing with data-dependent
+per-channel decay [arXiv:2404.05892].
+
+Recurrence (per head, state S ∈ R^{Dh×Dh}):
+
+    S_t   = diag(w_t) · S_{t−1} + k_tᵀ v_t
+    out_t = r_t · (S_{t−1} + diag(u) k_tᵀ v_t)
+
+with data-dependent decay w_t = exp(−exp(w0 + LoRA(x̃_t))) ∈ (0,1), token-
+shift interpolation x̃, and a gated output.  Channel mixing is the RWKV
+squared-ReLU two-layer FFN.
+
+Two execution paths:
+  * ``sequential`` — exact lax.scan over tokens (reference; O(T) steps);
+  * ``chunked``    — block-parallel form: within a chunk the contribution is
+    a masked (decay-weighted) quadratic form; across chunks only the
+    (B, H, Dh, Dh) state is carried.  This is the GLA/Mamba-2 chunking and
+    the TPU-friendly path (MXU matmuls of size chunk×Dh), and it is what
+    long_500k decode/train lowers.
+
+Numerics: decays accumulate multiplicatively within a chunk only (chunk 64
+⇒ worst-case product ~e^{−64·ε}), computed in fp32 via cumulative *log*
+decay, which avoids the underflow of naive cumprod ratios.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .params import normal, zeros
+from .layers import norm_init, norm_apply
+
+Array = jax.Array
+
+# Per-step log-decay floor.  The block-parallel (chunked) path factors the
+# pairwise decay e^{L_t − L_j} into e^{L_t}·e^{−L_j}; with |log decay| ≤
+# 0.55/step and chunk 64 both factors stay within e^{±35} ⊂ fp32.  The floor
+# bounds the *fastest* per-channel forgetting at e^{−0.55} ≈ 0.58/token —
+# a documented deviation from unbounded RWKV-6 decay (DESIGN.md §2); the
+# exact `impl="sequential"` path applies the same clamp so the two paths
+# are numerically identical and testable against each other.
+DECAY_CLAMP = 0.55
+
+
+def rwkv6_init(key, d: int, n_heads: int, head_dim: int, lora_rank: int = 64,
+               dtype=jnp.float32):
+    ks = jax.random.split(key, 10)
+    h, dh = n_heads, head_dim
+    assert h * dh == d, (h, dh, d)
+    return {
+        "mu": zeros((5, d), dtype, (None, "embed")),          # token-shift mixes r,k,v,g,w
+        "wr": normal(ks[0], (d, d), 1.0, dtype, ("embed", "heads_flat")),
+        "wk": normal(ks[1], (d, d), 1.0, dtype, ("embed", "heads_flat")),
+        "wv": normal(ks[2], (d, d), 1.0, dtype, ("embed", "heads_flat")),
+        "wg": normal(ks[3], (d, d), 1.0, dtype, ("embed", "heads_flat")),
+        "wo": normal(ks[4], (d, d), 1.0, dtype, ("heads_flat", "embed")),
+        "w0": zeros((d,), dtype, ("embed",)),                 # base log-log decay
+        "w_lora_a": normal(ks[5], (d, lora_rank), 1.0, dtype, ("embed", None)),
+        "w_lora_b": zeros((lora_rank, d), dtype, (None, "embed")),
+        "u": zeros((h, dh), dtype, ("heads", "head_dim")),    # bonus
+        "ln_x": norm_init(d, "layernorm"),                    # group-norm-ish out norm
+    }
+
+
+def _mix(x: Array, x_prev: Array, mu: Array) -> Array:
+    """Token shift: lerp(x_{t-1}, x_t, μ)."""
+    return x_prev + mu * (x - x_prev)
+
+
+def _project(p, x: Array, x_prev: Array, compute_dtype):
+    mu = p["mu"].astype(compute_dtype)
+    xr = _mix(x, x_prev, mu[0])
+    xk = _mix(x, x_prev, mu[1])
+    xv = _mix(x, x_prev, mu[2])
+    xg = _mix(x, x_prev, mu[3])
+    xw = _mix(x, x_prev, mu[4])
+    r = jnp.einsum("...d,df->...f", xr, p["wr"].astype(compute_dtype))
+    k = jnp.einsum("...d,df->...f", xk, p["wk"].astype(compute_dtype))
+    v = jnp.einsum("...d,df->...f", xv, p["wv"].astype(compute_dtype))
+    g = jnp.einsum("...d,df->...f", xg, p["wg"].astype(compute_dtype))
+    # data-dependent decay via LoRA, fp32
+    lora = jnp.tanh(
+        jnp.einsum("...d,dr->...r", xw.astype(jnp.float32), p["w_lora_a"].astype(jnp.float32))
+    )
+    logw = p["w0"].astype(jnp.float32) + jnp.einsum(
+        "...r,rd->...d", lora, p["w_lora_b"].astype(jnp.float32)
+    )
+    # decay in (0,1): w = exp(−exp(logw));  log_decay = −exp(logw) ≤ 0.
+    # Clamped at −DECAY_CLAMP per step so the chunked path's factored
+    # exponentials e^{±Σ log_decay} stay inside fp32 for chunk ≤ 64 (the
+    # exact sequential path applies the same clamp so both agree bit-for-
+    # bit; per-step decay is thus ≥ e^{−0.55} ≈ 0.58 — see module docstring).
+    log_decay = jnp.maximum(-jnp.exp(logw), -DECAY_CLAMP)
+    return r, k, v, g, log_decay
+
+
+def _heads(x: Array, h: int, dh: int) -> Array:
+    return x.reshape(x.shape[:-1] + (h, dh))
+
+
+def rwkv6_time_mix(
+    p,
+    x: Array,                       # (B, T, D)
+    n_heads: int,
+    head_dim: int,
+    state: Optional[Tuple[Array, Array]] = None,  # (prev_x (B,D), S (B,H,Dh,Dh))
+    chunk: int = 64,
+    impl: str = "chunked",
+    compute_dtype=jnp.bfloat16,
+    unroll: bool = False,
+) -> Tuple[Array, Tuple[Array, Array]]:
+    """Full-sequence time mixing.  Returns (out, (last_x, last_state))."""
+    b, t, d = x.shape
+    h, dh = n_heads, head_dim
+    xc = x.astype(compute_dtype)
+    prev_x = (
+        jnp.zeros((b, d), compute_dtype) if state is None else state[0].astype(compute_dtype)
+    )
+    s0 = (
+        jnp.zeros((b, h, dh, dh), jnp.float32) if state is None else state[1]
+    )
+
+    x_shift = jnp.concatenate([prev_x[:, None, :], xc[:, :-1, :]], axis=1)
+    r, k, v, g, log_decay = _project(p, xc, x_shift, compute_dtype)
+    r = _heads(r.astype(jnp.float32), h, dh)        # (B,T,H,Dh)
+    k = _heads(k.astype(jnp.float32), h, dh)
+    v = _heads(v.astype(jnp.float32), h, dh)
+    logw = _heads(log_decay, h, dh)                 # (B,T,H,Dh) ≤ 0
+    u = p["u"].astype(jnp.float32)                  # (H,Dh)
+
+    if impl == "sequential":
+        out, s_last = _wkv_sequential(r, k, v, logw, u, s0)
+    else:
+        out, s_last = _wkv_chunked(r, k, v, logw, u, s0, chunk, unroll)
+
+    out = out.reshape(b, t, d)
+    out = norm_apply(p["ln_x"], out.astype(compute_dtype), "layernorm")
+    out = out * jax.nn.silu(g.astype(compute_dtype))
+    y = jnp.einsum("btd,df->btf", out, p["wo"].astype(compute_dtype))
+    return y, (xc[:, -1, :], s_last)
+
+
+def _wkv_sequential(r, k, v, logw, u, s0):
+    """Exact token recurrence (reference)."""
+    b, t, h, dh = r.shape
+
+    def step(s, inp):
+        r_t, k_t, v_t, lw_t = inp                       # (B,H,Dh) each
+        kv = k_t[..., :, None] * v_t[..., None, :]      # (B,H,Dh,Dh)
+        out = jnp.einsum("bhi,bhij->bhj", r_t, s + u[None, :, :, None] * kv)
+        s_new = jnp.exp(lw_t)[..., None] * s + kv
+        return s_new, out
+
+    rs, ks, vs, lws = (jnp.moveaxis(a, 1, 0) for a in (r, k, v, logw))
+    s_last, outs = jax.lax.scan(step, s0, (rs, ks, vs, lws))
+    return jnp.moveaxis(outs, 0, 1), s_last            # (B,T,H,Dh)
+
+
+def _wkv_chunked(r, k, v, logw, u, s0, chunk: int, unroll: bool = False):
+    """Block-parallel WKV: intra-chunk masked quadratic + cross-chunk state.
+
+    Within a chunk (length C), with cumulative log-decay L_i = Σ_{m≤i} lw_m:
+      out_i = (r_i ⊙ e^{L_{i−1}}) Σ_state + Σ_{j<i} (r_i ⊙ e^{L_{i−1}−L_j}) k_j · v_j
+              + (r_i ⊙ u ⊙ k_i) v_i
+    computed as two matmuls with a strictly-lower-triangular mask.
+    """
+    b, t, h, dh = r.shape
+    c = chunk
+    pad = (-t) % c
+    if pad:
+        zf = lambda a: jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        r, k, v = zf(r), zf(k), zf(v)
+        logw = jnp.pad(logw, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    tp = t + pad
+    n = tp // c
+
+    rc = r.reshape(b, n, c, h, dh)
+    kc = k.reshape(b, n, c, h, dh)
+    vc = v.reshape(b, n, c, h, dh)
+    lw = logw.reshape(b, n, c, h, dh)
+
+    lcum = jnp.cumsum(lw, axis=2)                       # inclusive L_i
+    lexcl = lcum - lw                                   # exclusive L_{i−1}
+    ltot = lcum[:, :, -1:, :, :]                        # (B,n,1,H,Dh)
+
+    # intra-chunk pairwise: A[i,j] = Σ_d r_i e^{L_{i-1} - L_j} k_j  (j < i)
+    r_dec = rc * jnp.exp(lexcl)                         # r_i ⊙ e^{L_{i−1}}
+    k_dec = kc * jnp.exp(-lcum)                         # k_j ⊙ e^{−L_j}
+    scores = jnp.einsum("bnchd,bnmhd->bnhcm", r_dec, k_dec)
+    tri = jnp.tril(jnp.ones((c, c), bool), k=-1)        # strictly lower
+    scores = jnp.where(tri[None, None, None], scores, 0.0)
+    # bonus diagonal: (r_i ⊙ u ⊙ k_i)
+    diag = jnp.einsum("bnchd,hd,bnchd->bnch", rc, u, kc)
+    intra = jnp.einsum("bnhcm,bnmhd->bnchd", scores, vc) + diag[..., None] * vc
+
+    # cross-chunk: scan the (B,H,Dh,Dh) state over chunks
+    def chunk_step(s, inp):
+        r_dec_c, k_c, v_c, ltot_c, lcum_c = inp
+        # out from carry state: (r_i e^{L_{i−1}}) @ S
+        out_state = jnp.einsum("bchd,bhde->bche", r_dec_c, s)
+        # state update: S' = e^{L_C} ⊙_rows S + Σ_j e^{L_C − L_j} k_j v_jᵀ
+        k_scaled = k_c * jnp.exp(ltot_c - lcum_c)       # (B,C,H,Dh)
+        s_new = (
+            jnp.exp(ltot_c[:, 0])[..., None] * s
+            + jnp.einsum("bchd,bche->bhde", k_scaled, v_c)
+        )
+        return s_new, out_state
+
+    seq = (
+        jnp.moveaxis(r_dec, 1, 0),
+        jnp.moveaxis(kc, 1, 0),
+        jnp.moveaxis(vc, 1, 0),
+        jnp.moveaxis(jnp.broadcast_to(ltot, lcum.shape), 1, 0),
+        jnp.moveaxis(lcum, 1, 0),
+    )
+    s_last, out_state = jax.lax.scan(chunk_step, s0, seq,
+                                     unroll=n if unroll else 1)
+    out = intra + jnp.moveaxis(out_state, 0, 1)
+    out = out.reshape(b, tp, h, dh)[:, :t]
+    return out, s_last
+
+
+def rwkv6_decode_step(p, x, state, n_heads, head_dim, compute_dtype=jnp.bfloat16):
+    """One-token step: x (B,1,D); state = (prev_x, S)."""
+    out, new_state = rwkv6_time_mix(
+        p, x, n_heads, head_dim, state=state, impl="sequential",
+        compute_dtype=compute_dtype,
+    )
+    return out, new_state
+
+
+# ----------------------------------------------------------- channel mix
+
+def rwkv6_channel_init(key, d: int, f: int, dtype=jnp.float32):
+    k1, k2 = jax.random.split(key)
+    return {
+        "mu": zeros((2, d), dtype, (None, "embed")),
+        "wk": normal(k1, (d, f), 1.0, dtype, ("embed", "mlp")),
+        "wv": normal(k2, (f, d), 1.0, dtype, ("mlp", "embed")),
+        "wr": zeros((d, d), dtype, ("embed", "embed_out")),
+    }
+
+
+def rwkv6_channel_mix(p, x: Array, state: Optional[Array] = None,
+                      compute_dtype=jnp.bfloat16) -> Tuple[Array, Array]:
+    b, t, d = x.shape
+    xc = x.astype(compute_dtype)
+    prev = jnp.zeros((b, d), compute_dtype) if state is None else state.astype(compute_dtype)
+    x_shift = jnp.concatenate([prev[:, None, :], xc[:, :-1, :]], axis=1)
+    mu = p["mu"].astype(compute_dtype)
+    xk = _mix(xc, x_shift, mu[0])
+    xr = _mix(xc, x_shift, mu[1])
+    k = jnp.einsum("btd,df->btf", xk, p["wk"].astype(compute_dtype))
+    kk = jnp.square(jax.nn.relu(k))
+    v = jnp.einsum("btf,fd->btd", kk, p["wv"].astype(compute_dtype))
+    r = jax.nn.sigmoid(jnp.einsum("btd,de->bte", xr, p["wr"].astype(compute_dtype)))
+    return r * v, xc[:, -1, :]

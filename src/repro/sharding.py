@@ -1,0 +1,166 @@
+"""Logical-axis sharding rules → NamedSharding (DP / FSDP / TP / EP / SP).
+
+MaxText-style: every parameter dim carries a logical axis name (see
+models/params.py); the table below maps logical names to mesh axes.  A dim
+whose size is not divisible by its mesh-axes product silently falls back to
+replication (e.g. 8 KV heads on a 16-way tensor axis — the standard GQA
+practice of replicating KV over TP).
+
+Mesh: (pod, data, model) multi-pod or (data, model) single-pod.
+  batch       → (pod, data)      data parallel across pods and hosts
+  embed       → data             FSDP weight shard
+  mlp/heads/vocab/experts → model  tensor / expert parallel
+  seq (activations)       → model  sequence parallelism between blocks
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+# logical axis name → tuple of mesh axis names (tried in order)
+DEFAULT_RULES: dict[str, Tuple[str, ...]] = {
+    "embed": ("data",),
+    "embed_out": (),
+    "mlp": ("model",),
+    "mlp_out": (),
+    "heads": ("model",),
+    "heads_flat": ("model",),
+    "kv": ("model",),
+    "head_dim": (),
+    "vocab": ("model",),
+    "experts": ("model",),
+    "layers": (),
+}
+
+
+def _mesh_size(mesh: Mesh, names: Tuple[str, ...]) -> int:
+    return int(np.prod([mesh.shape[n] for n in names])) if names else 1
+
+
+def spec_for_axes(
+    mesh: Mesh,
+    shape: Tuple[int, ...],
+    axes: Tuple[Optional[str], ...],
+    rules: Optional[dict] = None,
+) -> P:
+    """PartitionSpec for one array, honoring divisibility."""
+    rules = rules or DEFAULT_RULES
+    parts = []
+    used: set[str] = set()
+    for dim, name in zip(shape, axes):
+        if name is None:
+            parts.append(None)
+            continue
+        mesh_axes = tuple(a for a in rules.get(name, ()) if a in mesh.shape and a not in used)
+        if mesh_axes and dim % _mesh_size(mesh, mesh_axes) == 0:
+            parts.append(mesh_axes if len(mesh_axes) > 1 else mesh_axes[0])
+            used.update(mesh_axes)
+        else:
+            parts.append(None)
+    return P(*parts)
+
+
+def param_shardings(mesh: Mesh, param_values, param_axes, rules=None):
+    """NamedSharding tree matching the param values tree."""
+
+    def one(v, axes):
+        return NamedSharding(mesh, spec_for_axes(mesh, v.shape, axes, rules))
+
+    return jax.tree.map(one, param_values, param_axes)
+
+
+def batch_sharding(mesh: Mesh, name: str = "batch") -> NamedSharding:
+    """Leading-dim batch sharding over all data-parallel axes present."""
+    dp = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    return NamedSharding(mesh, P(dp))
+
+
+def batch_specs(mesh: Mesh, batch_shapes) -> Any:
+    """Shard every batch input over (pod, data) on its leading dim; scalars
+    replicate."""
+    dp = tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+    def one(s):
+        if len(s.shape) == 0 or s.shape[0] % _mesh_size(mesh, dp) != 0:
+            return NamedSharding(mesh, P())
+        return NamedSharding(mesh, P(dp))
+
+    return jax.tree.map(one, batch_shapes)
+
+
+def cache_sharding(mesh: Mesh, shape: Tuple[int, ...], n_kv: int) -> NamedSharding:
+    """KV-cache (B, Hkv, S, Dh): batch over (pod, data); heads over model
+    when divisible, else *sequence* over model (flash-decoding split-KV) —
+    the trick that keeps a 32k GQA cache within per-device HBM."""
+    dp = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    model = mesh.shape.get("model", 1)
+    b, h, s, d = shape
+    bspec = dp if b % _mesh_size(mesh, dp) == 0 else None
+    if h % model == 0:
+        return NamedSharding(mesh, P(bspec, "model", None, None))
+    if s % model == 0:
+        return NamedSharding(mesh, P(bspec, None, "model", None))
+    return NamedSharding(mesh, P(bspec, None, None, None))
+
+
+def activation_spec(mesh: Mesh, sequence_parallel: bool = True) -> P:
+    """Residual-stream constraint (B, T, D): batch over (pod,data), seq over
+    model (Megatron-style sequence parallelism for the saved activations)."""
+    dp = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    if sequence_parallel and "model" in mesh.shape:
+        return P(dp, "model", None)
+    return P(dp, None, None)
+
+
+def cache_shardings(mesh: Mesh, cache_shapes, n_kv: int):
+    """Sharding tree for a decode cache pytree (path-aware).
+
+    * KV leaves (path contains "kv"; core (B, H, S, D)): batch over
+      (pod, data); heads over model when divisible, else *sequence* over
+      model (flash-decoding split-KV).
+    * recurrent-state leaves: batch dim over (pod, data), last (width) dim
+      over model when divisible.
+    * leaves under "layers" carry a leading scan-group dim (replicated).
+    """
+    dp = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    model = mesh.shape.get("model", 1)
+    dp_size = _mesh_size(mesh, dp)
+
+    def one(path, s):
+        keys = [getattr(k, "key", getattr(k, "name", "")) for k in path]
+        stacked = bool(keys) and keys[0] == "layers"
+        shp = s.shape
+        core = shp[1:] if stacked else shp
+        lead = (None,) if stacked else ()
+        is_kv = any("kv" in str(k) for k in keys) and len(core) == 4
+        if is_kv:
+            b, h, seq, d = core
+            bspec = dp if b % dp_size == 0 else None
+            if h % model == 0:
+                parts = (bspec, "model", None, None)
+            elif seq % model == 0:
+                parts = (bspec, None, "model", None)
+            else:
+                parts = (bspec, None, None, None)
+            return NamedSharding(mesh, P(*lead, *parts))
+        parts = []
+        for i, dim in enumerate(core):
+            if i == 0 and dim % dp_size == 0:
+                parts.append(dp)
+            elif (
+                i == len(core) - 1
+                and len(core) >= 2
+                and model > 1
+                and dim % model == 0
+            ):
+                parts.append("model")
+            else:
+                parts.append(None)
+        return NamedSharding(mesh, P(*lead, *parts))
+
+    return jax.tree_util.tree_map_with_path(one, cache_shapes)

@@ -1,0 +1,130 @@
+"""Train / serve step builders with distributed shardings.
+
+``make_train_step`` closes over a Model and AdamW config and returns the
+pure step ``(state, batch) → (state', metrics)``; sharding comes from the
+logical-axis tables in `repro.sharding` attached to the input
+ShapeDtypeStructs / arrays, so the same function serves the real run and the
+multi-pod dry-run.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro import sharding as sh
+from repro.models.model import Model
+from repro.models.params import unzip
+from repro.optim import adamw
+
+Array = jax.Array
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: adamw.AdamWState
+    step: Array
+
+
+def init_train_state(model: Model, key) -> Tuple[TrainState, Any]:
+    """(state, param_axes) — materializes parameters (small configs only)."""
+    params, axes = unzip(model.init(key))
+    return TrainState(params=params, opt=adamw.init(params), step=jnp.zeros((), jnp.int32)), axes
+
+
+def eval_params(model: Model, key=None) -> Tuple[Any, Any]:
+    """ShapeDtypeStruct params + logical axes — no allocation (dry-run).
+
+    The axes tree (plain Python) is captured at trace time via a side
+    channel because eval_shape outputs must be JAX types."""
+    key = jax.random.PRNGKey(0) if key is None else key
+    captured = {}
+
+    def f(k):
+        values, axes = unzip(model.init(k))
+        captured["axes"] = axes
+        return values
+
+    params = jax.eval_shape(f, key)
+    return params, captured["axes"]
+
+
+def eval_train_state(model: Model, key=None) -> Tuple[Any, Any]:
+    """ShapeDtypeStruct TrainState + axes — no allocation (dry-run path)."""
+    params, axes = eval_params(model, key)
+    state = TrainState(
+        params=params,
+        opt=jax.eval_shape(adamw.init, params),
+        step=jax.ShapeDtypeStruct((), jnp.int32),
+    )
+    return state, axes
+
+
+def state_shardings(mesh: Mesh, state: TrainState, axes) -> TrainState:
+    """NamedSharding tree mirroring TrainState (opt moments follow params)."""
+    p_sh = sh.param_shardings(mesh, state.params, axes)
+    return TrainState(
+        params=p_sh,
+        opt=adamw.AdamWState(
+            step=NamedSharding(mesh, P()),
+            mu=p_sh,
+            nu=p_sh,
+        ),
+        step=NamedSharding(mesh, P()),
+    )
+
+
+def make_train_step(model: Model, opt_cfg: adamw.AdamWConfig):
+    def train_step(state: TrainState, batch: Dict[str, Array]):
+        def loss_fn(p):
+            return model.loss(p, batch)
+
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            state.params
+        )
+        new_params, new_opt, opt_metrics = adamw.apply(
+            opt_cfg, state.opt, state.params, grads
+        )
+        out = TrainState(params=new_params, opt=new_opt, step=state.step + 1)
+        return out, {"loss": loss, **metrics, **opt_metrics}
+
+    return train_step
+
+
+def make_prefill_step(model: Model):
+    """Forward over the full prompt; returns last-position logits (the KV-
+    cache-resident regime is covered by the decode cells)."""
+
+    def prefill_step(params, batch: Dict[str, Array]):
+        hidden, _ = model.backbone(params, batch)
+        last = hidden[:, -1:, :]
+        from repro.models import layers as ll
+
+        if model.cfg.tie_embeddings:
+            logits = ll.tied_logits_apply(params["embed"], last, model.compute_dtype)
+        else:
+            logits = ll.logits_apply(params["logits"], last, model.compute_dtype)
+        return logits.astype(jnp.float32)
+
+    return prefill_step
+
+
+def make_decode_step(model: Model):
+    def serve_step(params, cache, tokens: Array, pos: Array):
+        return model.decode_step(params, cache, tokens, pos)
+
+    return serve_step
+
+
+def attach_shardings(tree, shardings):
+    """Return ShapeDtypeStructs with .sharding set (for .lower())."""
+
+    def one(s, sharding):
+        return jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sharding)
+
+    return jax.tree.map(one, tree, shardings)

@@ -1,0 +1,25 @@
+"""Shared pytest fixtures.
+
+NOTE: deliberately does NOT set --xla_force_host_platform_device_count —
+unit/smoke tests must see the real single CPU device.  Multi-device tests
+(tests/test_distributed.py, tests/test_dryrun_small.py) spawn subprocesses
+with their own XLA_FLAGS.
+"""
+
+import os
+import sys
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+def pytest_configure(config):
+    config.addinivalue_line("markers", "slow: long-running test")
+    config.addinivalue_line("markers", "subprocess: spawns a multi-device subprocess")

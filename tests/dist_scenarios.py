@@ -1,0 +1,222 @@
+"""Multi-device scenarios executed in a subprocess (needs fake CPU devices).
+
+Run as:  python tests/dist_scenarios.py <scenario>
+Exits 0 on success; prints diagnostics.  Kept out of pytest collection —
+tests/test_distributed.py spawns it with XLA_FLAGS set.
+"""
+
+import os
+import sys
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.core import (  # noqa: E402
+    EngineConfig,
+    ForceParams,
+    init_state,
+    make_pool,
+    run_jit,
+    spec_for_space,
+)
+from repro.core.distributed import (  # noqa: E402
+    DomainConfig,
+    global_kind_counts,
+    init_dist_state,
+    make_distributed_step,
+)
+
+
+def _mesh(shape, names):
+    return jax.make_mesh(
+        shape, names, axis_types=(jax.sharding.AxisType.Auto,) * len(shape)
+    )
+
+
+def _force_only_setup(halo_codec):
+    """Deterministic (no-RNG) force relaxation on a 4×2 device grid."""
+    extent, halo = 16.0, 2.0
+    mesh = _mesh((4, 2), ("data", "model"))
+    dcfg = DomainConfig(
+        mesh_axes=("data", "model"),
+        axis_sizes=(4, 2),
+        extent=extent,
+        halo_width=halo,
+        halo_capacity=96,
+        migrate_capacity=48,
+        depth=16.0,
+        halo_codec=halo_codec,
+    )
+    spec = dcfg.grid_spec(box_size=2.0, max_per_cell=32)
+    ecfg = EngineConfig(
+        spec=spec,
+        behaviors=(),
+        force_params=ForceParams(),
+        dt=0.05,
+        min_bound=0.0,
+        max_bound=extent,
+        boundary="open",
+        sort_frequency=4,
+    )
+    rng = np.random.default_rng(42)
+    n = 500
+    # Interior margin keeps the parity comparison clean: the distributed
+    # space is a torus (+ closed z), the single-node reference is open —
+    # identical physics only while no agent touches a global boundary.
+    pos = rng.uniform(2.0, [4 * extent - 2.0, 2 * extent - 2.0, 14.0], (n, 3)).astype(
+        np.float32
+    )
+    return mesh, dcfg, ecfg, pos, n
+
+
+def _single_node_reference(pos, n_steps, dt=0.05):
+    """Same physics on one device in global coordinates (open z, toroidal
+    x/y is irrelevant here: diameter 1.6 agents stay far from edges)."""
+    n = pos.shape[0]
+    pool = make_pool(n, jnp.asarray(pos), diameter=1.6)
+    spec = spec_for_space(0.0, 64.0, 2.0, max_per_cell=32)
+    ecfg = EngineConfig(
+        spec=spec,
+        behaviors=(),
+        force_params=ForceParams(),
+        dt=dt,
+        min_bound=0.0,
+        max_bound=64.0,
+        boundary="open",
+        sort_frequency=4,
+    )
+    state = init_state(pool)
+    final, _ = run_jit(ecfg, state, n_steps)
+    return np.asarray(final.pool.position), np.asarray(final.pool.alive)
+
+
+def _global_positions(dcfg, state):
+    """Recover global coordinates from the stacked local frames."""
+    p = np.asarray(state.pool.position)  # (n_dev, C, 3)
+    a = np.asarray(state.pool.alive)
+    n_dev = p.shape[0]
+    out = []
+    for dev in range(n_dev):
+        cx, cy = divmod(dev, dcfg.axis_sizes[1])
+        q = p[dev][a[dev]].copy()
+        q[:, 0] += cx * dcfg.extent
+        q[:, 1] += cy * dcfg.extent
+        out.append(q)
+    return np.concatenate(out, axis=0)
+
+
+def scenario_conservation():
+    mesh, dcfg, ecfg, pos, n = _force_only_setup("int16")
+    state = init_dist_state(dcfg, capacity=192, positions=pos, diameter=1.6)
+    step = make_distributed_step(mesh, dcfg, ecfg)
+    for _ in range(30):
+        state = step(state)
+    alive = int(np.asarray(state.pool.alive).sum())
+    assert alive == n, f"population changed: {alive} != {n}"
+    assert int(np.asarray(state.migrate_overflow).sum()) == 0
+    assert int(np.asarray(state.halo_overflow).sum()) == 0
+    print("conservation OK")
+
+
+def scenario_parity_simple(codec="int16", tol=1e-3):
+    """Distributed relaxation must match the single-node engine agent-by-
+    agent (matched by nearest neighbor, since orderings differ)."""
+    mesh, dcfg, ecfg, pos, n = _force_only_setup(codec)
+    n_steps = 20
+    state = init_dist_state(dcfg, capacity=192, positions=pos, diameter=1.6)
+    step = make_distributed_step(mesh, dcfg, ecfg)
+    for _ in range(n_steps):
+        state = step(state)
+    dist_pos = _global_positions(dcfg, state)
+
+    ref_pos, ref_alive = _single_node_reference(pos, n_steps, dt=ecfg.dt)
+    ref = ref_pos[ref_alive]
+
+    assert dist_pos.shape[0] == ref.shape[0] == n
+    # brute-force nearest match (n is small)
+    d = np.linalg.norm(dist_pos[:, None, :] - ref[None, :, :], axis=-1)
+    nearest = d.min(axis=1)
+    worst = float(nearest.max())
+    print(f"codec={codec}: worst agent deviation vs single-node = {worst:.5f}")
+    assert worst < tol, f"parity violated: {worst} >= {tol}"
+    # every reference agent is matched by someone (bijectivity proxy)
+    assert len(set(d.argmin(axis=1).tolist())) == n
+    print("parity OK")
+
+
+def scenario_codec_reduction():
+    """int16/int8 halo codecs must not change physics beyond their bound."""
+    results = {}
+    for codec in ("none", "int16", "int8"):
+        mesh, dcfg, ecfg, pos, n = _force_only_setup(codec)
+        state = init_dist_state(dcfg, capacity=192, positions=pos, diameter=1.6)
+        step = make_distributed_step(mesh, dcfg, ecfg)
+        for _ in range(15):
+            state = step(state)
+        results[codec] = _global_positions(dcfg, state)
+        results[codec] = results[codec][np.lexsort(results[codec].T)]
+    err16 = np.abs(results["int16"] - results["none"]).max()
+    err8 = np.abs(results["int8"] - results["none"]).max()
+    print(f"max deviation: int16={err16:.5f} int8={err8:.5f}")
+    assert err16 < 1e-3, err16
+    assert err8 < 2e-2, err8
+    print("codec reduction OK")
+
+
+def scenario_multipod():
+    """3D decomposition over a (2, 2, 2) mesh with a 'pod' axis."""
+    mesh = _mesh((2, 2, 2), ("pod", "data", "model"))
+    extent = 16.0
+    dcfg = DomainConfig(
+        mesh_axes=("data", "model", "pod"),
+        axis_sizes=(2, 2, 2),
+        extent=extent,
+        halo_width=2.0,
+        halo_capacity=96,
+        migrate_capacity=48,
+        halo_codec="int16",
+    )
+    spec = dcfg.grid_spec(box_size=2.0, max_per_cell=32)
+    ecfg = EngineConfig(
+        spec=spec,
+        behaviors=(),
+        force_params=ForceParams(),
+        dt=0.05,
+        min_bound=0.0,
+        max_bound=extent,
+        boundary="open",
+        sort_frequency=4,
+    )
+    rng = np.random.default_rng(7)
+    n = 400
+    pos = rng.uniform(0.5, 2 * extent - 0.5, (n, 3)).astype(np.float32)
+    state = init_dist_state(dcfg, capacity=192, positions=pos, diameter=1.6)
+    step = make_distributed_step(mesh, dcfg, ecfg)
+    for _ in range(20):
+        state = step(state)
+    alive = int(np.asarray(state.pool.alive).sum())
+    assert alive == n, f"{alive} != {n}"
+    print("multipod OK")
+
+
+if __name__ == "__main__":
+    which = sys.argv[1] if len(sys.argv) > 1 else "all"
+    table = {
+        "conservation": scenario_conservation,
+        "parity": lambda: scenario_parity_simple("int16"),
+        "parity_none": lambda: scenario_parity_simple("none"),
+        "codec": scenario_codec_reduction,
+        "multipod": scenario_multipod,
+    }
+    if which == "all":
+        for name, fn in table.items():
+            print(f"--- {name}")
+            fn()
+    else:
+        table[which]()
+    print("SCENARIOS PASSED")

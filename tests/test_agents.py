@@ -1,0 +1,103 @@
+"""Unit + property tests for the SoA agent pool (§5.3.2)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import add_agents, compact, make_pool, permute, remove_agents
+
+
+def _pool(n=10, cap=32):
+    pos = jnp.arange(n * 3, dtype=jnp.float32).reshape(n, 3)
+    return make_pool(cap, pos, diameter=2.0, kind=1, attrs={"score": jnp.arange(n, dtype=jnp.float32)})
+
+
+def test_make_pool_basics():
+    pool = _pool()
+    assert pool.capacity == 32
+    assert int(pool.num_alive()) == 10
+    assert pool.position.shape == (32, 3)
+    assert pool.attrs["score"].shape == (32,)
+    assert bool(pool.alive[9]) and not bool(pool.alive[10])
+
+
+def test_make_pool_overflow_raises():
+    with pytest.raises(ValueError):
+        make_pool(4, jnp.zeros((8, 3)))
+
+
+def test_remove_then_compact():
+    pool = _pool()
+    mask = jnp.zeros((32,), bool).at[jnp.array([0, 3, 5])].set(True)
+    pool = remove_agents(pool, mask)
+    assert int(pool.num_alive()) == 7
+    dense = compact(pool)
+    assert int(dense.num_alive()) == 7
+    assert bool(jnp.all(dense.alive[:7])) and not bool(jnp.any(dense.alive[7:]))
+    # compaction preserves the surviving set
+    survivors = {float(x) for x in np.asarray(pool.attrs["score"])[np.asarray(pool.alive)]}
+    dense_set = {float(x) for x in np.asarray(dense.attrs["score"])[np.asarray(dense.alive)]}
+    assert survivors == dense_set
+
+
+def test_add_agents_fills_free_slots():
+    pool = _pool(n=10, cap=16)
+    spawn = jnp.zeros((16,), bool).at[jnp.array([2, 7])].set(True)
+    child_pos = pool.position + 1.0
+    new = add_agents(pool, spawn, child_pos, pool.diameter, pool.kind)
+    assert int(new.num_alive()) == 12
+    assert int(new.overflow) == 0
+    # children inherit attrs from the spawner
+    np.testing.assert_allclose(np.asarray(new.attrs["score"][10]), 2.0)
+    np.testing.assert_allclose(np.asarray(new.attrs["score"][11]), 7.0)
+
+
+def test_add_agents_overflow_counted():
+    pool = _pool(n=15, cap=16)
+    spawn = pool.alive  # 15 spawns, 1 free slot
+    new = add_agents(pool, spawn, pool.position, pool.diameter, pool.kind)
+    assert int(new.num_alive()) == 16
+    assert int(new.overflow) == 14
+
+
+def test_permute_roundtrip():
+    pool = _pool()
+    perm = jnp.flip(jnp.arange(32))
+    back = permute(permute(pool, perm), perm)
+    np.testing.assert_array_equal(np.asarray(back.position), np.asarray(pool.position))
+    np.testing.assert_array_equal(np.asarray(back.alive), np.asarray(pool.alive))
+
+
+@settings(deadline=None, max_examples=25)
+@given(
+    n=st.integers(1, 20),
+    n_remove=st.integers(0, 20),
+    n_spawn=st.integers(0, 20),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_population_accounting_property(n, n_remove, n_spawn, seed):
+    """Invariant: alive' = alive − removed + min(spawned, free)."""
+    cap = 24
+    rng = np.random.default_rng(seed)
+    pool = make_pool(cap, jnp.asarray(rng.uniform(0, 10, (n, 3)), jnp.float32))
+
+    rm_idx = rng.choice(n, size=min(n_remove, n), replace=False)
+    rm = jnp.zeros((cap,), bool).at[jnp.asarray(rm_idx, jnp.int32)].set(True) if len(rm_idx) else jnp.zeros((cap,), bool)
+    pool = remove_agents(pool, rm)
+    alive_after_rm = int(pool.num_alive())
+    assert alive_after_rm == n - len(rm_idx)
+
+    alive_ids = np.nonzero(np.asarray(pool.alive))[0]
+    spawn_ids = rng.choice(alive_ids, size=min(n_spawn, len(alive_ids)), replace=False) if len(alive_ids) else []
+    spawn = jnp.zeros((cap,), bool)
+    if len(spawn_ids):
+        spawn = spawn.at[jnp.asarray(spawn_ids, jnp.int32)].set(True)
+    new = add_agents(pool, spawn, pool.position, pool.diameter, pool.kind)
+
+    free = cap - alive_after_rm
+    expected = alive_after_rm + min(len(spawn_ids), free)
+    assert int(new.num_alive()) == expected
+    assert int(new.overflow) == max(len(spawn_ids) - free, 0)

@@ -1,0 +1,72 @@
+"""Delta-encoded gradient all-reduce tests (optim/compression.py)."""
+
+import os
+import subprocess
+import sys
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import delta as dc
+from repro.optim import compression as gc
+
+
+def test_wire_bytes_accounting():
+    grads = {"a": jnp.zeros((1000,)), "b": jnp.zeros((50, 50))}
+    c8, base = gc.compression_wire_bytes(grads, jnp.int8)
+    assert base == 3500 * 4 and c8 == 3500
+
+
+def test_error_feedback_state_shapes():
+    grads = {"w": jnp.ones((8, 4))}
+    errs = gc.init_error_state(grads)
+    assert errs["w"].shape == (8, 4) and errs["w"].dtype == jnp.float32
+
+
+_SCEN = r"""
+import os, sys
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+sys.path.insert(0, %(src)r)
+import jax, jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+from repro.optim import compression as gc
+from repro.launch.mesh import make_mesh
+
+mesh = make_mesh((8,), ("data",))
+rng = np.random.default_rng(0)
+# per-device distinct gradients, stacked then shard_mapped as replicated —
+# emulate by running the compressed reduce on a value that differs per rank
+# via axis_index
+def body(x, e):
+    idx = jax.lax.axis_index("data").astype(jnp.float32)
+    g = x * (idx + 1.0)       # rank-dependent gradient
+    out, ne = gc.compressed_psum_leaf(g, e, "data", jnp.int8)
+    true = x * jnp.float32((1+2+3+4+5+6+7+8) / 8.0)
+    return out, ne, true
+
+from jax import shard_map
+fn = jax.jit(shard_map(body, mesh=mesh, in_specs=(P(), P()),
+                       out_specs=(P(), P(), P()), check_vma=False))
+x = jnp.asarray(rng.normal(0, 1, (256,)), jnp.float32)
+e = jnp.zeros((256,), jnp.float32)
+errs = []
+for step in range(12):
+    out, e, true = fn(x, e)
+    errs.append(float(jnp.abs(out - true).max() / jnp.abs(true).max()))
+print("relative errors:", [round(v, 4) for v in errs])
+assert errs[0] < 0.15, errs[0]
+assert min(errs) < 0.05
+print("COMPRESSED ALLREDUCE OK")
+"""
+
+
+@pytest.mark.subprocess
+def test_compressed_allreduce_accuracy():
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    code = _SCEN % {"src": os.path.abspath(src)}
+    proc = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                          text=True, timeout=540)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "COMPRESSED ALLREDUCE OK" in proc.stdout

@@ -1,0 +1,83 @@
+"""Delta-codec tests (§6.2.3): error bounds, freshness, error feedback."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import delta as dc
+
+
+def test_roundtrip_within_bound():
+    codec = dc.DeltaCodec.create((16, 3), scale=0.01)
+    x = jnp.asarray(np.random.default_rng(0).uniform(-1, 1, (16, 3)), jnp.float32)
+    q, codec = dc.encode(codec, x, wire_dtype=jnp.int16)
+    recon = codec.ref  # sender tracks receiver reconstruction
+    assert q.dtype == jnp.int16
+    np.testing.assert_allclose(np.asarray(recon), np.asarray(x), atol=0.005 + 1e-6)
+
+
+def test_receiver_matches_sender():
+    send = dc.DeltaCodec.create((8,), scale=0.05)
+    recv = dc.DeltaCodec.create((8,), scale=0.05)
+    rng = np.random.default_rng(1)
+    x = jnp.zeros((8,))
+    for _ in range(10):
+        x = x + jnp.asarray(rng.normal(0, 0.3, (8,)), jnp.float32)
+        q, send = dc.encode(send, x)
+        y, recv = dc.decode(recv, q)
+        np.testing.assert_array_equal(np.asarray(send.ref), np.asarray(recv.ref))
+        np.testing.assert_allclose(np.asarray(y), np.asarray(x), atol=0.026)
+
+
+@settings(deadline=None, max_examples=30)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    steps=st.integers(1, 12),
+    scale=st.floats(1e-3, 1e-1),
+)
+def test_error_feedback_never_accumulates(seed, steps, scale):
+    """|reconstruction − truth| ≤ scale/2 after every step (int16, in-range
+    walks) — the error-feedback invariant that makes lossy deltas safe."""
+    rng = np.random.default_rng(seed)
+    codec = dc.DeltaCodec.create((4,), scale=scale)
+    x = np.zeros(4, np.float32)
+    for _ in range(steps):
+        x = x + rng.uniform(-1, 1, 4).astype(np.float32)
+        q, codec = dc.encode(codec, jnp.asarray(x))
+        err = np.abs(np.asarray(codec.ref) - x).max()
+        assert err <= scale / 2 + 1e-6
+
+
+def test_int8_clipping_recovers():
+    """A jump beyond int8 range clips, but error feedback catches up over
+    subsequent steps (paper's slowly-varying assumption violated once)."""
+    codec = dc.DeltaCodec.create((1,), scale=0.1)
+    big = jnp.asarray([30.0], jnp.float32)  # needs 300 quanta; int8 max 127
+    for i in range(4):
+        q, codec = dc.encode(codec, big, wire_dtype=jnp.int8)
+    np.testing.assert_allclose(np.asarray(codec.ref), 30.0, atol=0.05)
+
+
+def test_fresh_slot_reset():
+    codec = dc.DeltaCodec.create((4,), scale=0.01)
+    x = jnp.asarray([1.0, 2.0, 3.0, 4.0], jnp.float32)
+    _, codec = dc.encode(codec, x)
+    codec = dc.reset_slots(codec, jnp.asarray([True, False, False, False]))
+    np.testing.assert_allclose(float(codec.ref[0]), 0.0)
+    np.testing.assert_allclose(float(codec.ref[1]), 2.0, atol=0.01)
+
+
+def test_quantize_symmetric_roundtrip():
+    x = jnp.asarray(np.random.default_rng(2).normal(0, 3, (64,)), jnp.float32)
+    q, scale = dc.quantize_symmetric(x, jnp.int8)
+    y = dc.dequantize(q, scale)
+    assert np.abs(np.asarray(y - x)).max() <= float(scale) / 2 + 1e-6
+
+
+def test_wire_bytes():
+    codec = dc.DeltaCodec.create((128, 3), scale=0.01)
+    q16, _ = dc.encode(codec, jnp.zeros((128, 3)), wire_dtype=jnp.int16)
+    q8, _ = dc.encode(codec, jnp.zeros((128, 3)), wire_dtype=jnp.int8)
+    assert dc.wire_bytes(q16) == 128 * 3 * 2
+    assert dc.wire_bytes(q8) == 128 * 3

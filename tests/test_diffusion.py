@@ -1,0 +1,85 @@
+"""Diffusion solver tests, including the Fig 4.9 convergence study."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    analytical_point_source,
+    concentration_at,
+    diffuse,
+    gradient_at,
+    increase_concentration,
+    make_grid,
+)
+from repro.core.diffusion import stability_limit
+
+
+def test_mass_conserved_interior():
+    """Without decay and far from boundaries, total mass is conserved."""
+    g = make_grid(0.0, 100.0, 40, diffusion_coefficient=0.5)
+    g = increase_concentration(g, jnp.array([[50.0, 50.0, 50.0]]), jnp.array([42.0]))
+    total0 = float(g.concentration.sum())
+    for _ in range(20):
+        g = diffuse(g, 0.5)
+    np.testing.assert_allclose(float(g.concentration.sum()), total0, rtol=1e-5)
+
+
+def test_decay_reduces_mass():
+    g = make_grid(0.0, 100.0, 20, diffusion_coefficient=0.0, decay_constant=0.1)
+    g = increase_concentration(g, jnp.array([[50.0, 50.0, 50.0]]), jnp.array([10.0]))
+    g = diffuse(g, 1.0)
+    np.testing.assert_allclose(float(g.concentration.sum()), 9.0, rtol=1e-5)
+
+
+def test_outflow_boundary_loses_mass():
+    g = make_grid(0.0, 10.0, 5, diffusion_coefficient=0.5)
+    # source right at the corner voxel
+    g = increase_concentration(g, jnp.array([[0.5, 0.5, 0.5]]), jnp.array([10.0]))
+    for _ in range(10):
+        g = diffuse(g, 0.5)
+    assert float(g.concentration.sum()) < 10.0
+
+
+def test_gradient_points_to_source():
+    g = make_grid(0.0, 50.0, 25, diffusion_coefficient=0.5)
+    g = increase_concentration(g, jnp.array([[25.0, 25.0, 25.0]]), jnp.array([100.0]))
+    for _ in range(5):
+        g = diffuse(g, 1.0)
+    grad = gradient_at(g, jnp.array([[15.0, 25.0, 25.0]]))
+    assert float(grad[0, 0]) > 0.9  # +x toward the source
+
+
+@pytest.mark.slow
+def test_convergence_to_analytical():
+    """Fig 4.9: increasing grid resolution converges the simulated field to
+    the instantaneous-point-source solution u(r,t) = Q/(4πDt)^{3/2}·e^{−r²/4Dt}.
+
+    Relative L2 error over voxel centers in a shell 20 ≤ r ≤ 60 μm (away from
+    the source singularity and the boundary) must decrease monotonically."""
+    d_coeff = 50.0
+    extent = 400.0
+    t_end = 20.0
+    errors = []
+    for res in (20, 40, 80):
+        g = make_grid(-extent / 2, extent / 2, res, diffusion_coefficient=d_coeff)
+        voxel_vol = g.spacing**3
+        g = increase_concentration(
+            g, jnp.array([[0.0, 0.0, 0.0]]), jnp.array([1.0 / voxel_vol])
+        )
+        dt = 0.8 * stability_limit(g)
+        n_steps = int(np.ceil(t_end / dt))
+        dt = t_end / n_steps
+        for _ in range(n_steps):
+            g = diffuse(g, dt)
+        centers = -extent / 2 + g.spacing * (np.arange(res) + 0.5)
+        xx, yy, zz = np.meshgrid(centers, centers, centers, indexing="ij")
+        r = np.sqrt(xx**2 + yy**2 + zz**2)
+        shell = (r >= 20.0) & (r <= 60.0)
+        ana = np.asarray(
+            analytical_point_source(1.0, d_coeff, jnp.asarray(r[shell]), jnp.float32(t_end))
+        )
+        sim = np.asarray(g.concentration)[shell]
+        errors.append(float(np.linalg.norm(sim - ana) / np.linalg.norm(ana)))
+    assert errors[2] < errors[1] < errors[0], errors
+    assert errors[2] < 0.1, errors

@@ -1,0 +1,58 @@
+"""TeraAgent distributed-engine tests (Ch. 6).
+
+The engine needs multiple devices; each test spawns a subprocess with
+``--xla_force_host_platform_device_count=8`` (the main pytest process keeps
+the real single-device view, per the dry-run isolation rule).
+"""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+_SCRIPT = os.path.join(os.path.dirname(__file__), "dist_scenarios.py")
+
+
+def _run(scenario: str, timeout: int = 540) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    proc = subprocess.run(
+        [sys.executable, _SCRIPT, scenario],
+        capture_output=True,
+        text=True,
+        timeout=timeout,
+        env=env,
+    )
+    assert proc.returncode == 0, f"scenario {scenario} failed:\n{proc.stdout}\n{proc.stderr}"
+    return proc.stdout
+
+
+@pytest.mark.subprocess
+def test_agent_conservation():
+    out = _run("conservation")
+    assert "conservation OK" in out
+
+
+@pytest.mark.subprocess
+@pytest.mark.slow
+def test_physics_parity_with_single_node():
+    """The distributed engine is the *same simulation* split over devices:
+    20 relaxation steps must land every agent where the single-node engine
+    puts it (§6.3.3 correctness verification)."""
+    out = _run("parity")
+    assert "parity OK" in out
+
+
+@pytest.mark.subprocess
+@pytest.mark.slow
+def test_delta_codec_physics_bound():
+    """§6.2.3: quantized halo deltas change physics only within the bound."""
+    out = _run("codec")
+    assert "codec reduction OK" in out
+
+
+@pytest.mark.subprocess
+def test_multipod_3d_decomposition():
+    out = _run("multipod")
+    assert "multipod OK" in out

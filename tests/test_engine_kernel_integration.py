@@ -1,0 +1,68 @@
+"""Engine ↔ Pallas-kernel integration: the `impl="pallas"` switches must
+produce the same physics as the reference paths (interpret mode)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    EngineConfig,
+    ForceParams,
+    build_index,
+    init_state,
+    make_pool,
+    mechanical_forces,
+    run_jit,
+    spec_for_space,
+)
+from repro.core.diffusion import diffuse, increase_concentration, make_grid
+
+
+def test_engine_force_pallas_matches_reference():
+    rng = np.random.default_rng(0)
+    pos = jnp.asarray(rng.uniform(0, 20, (120, 3)), jnp.float32)
+    pool = make_pool(128, pos, diameter=2.0)
+    spec = spec_for_space(0.0, 20.0, 2.5, max_per_cell=64)
+    index = build_index(spec, pool)
+    fp = ForceParams()
+    ref = mechanical_forces(spec, index, pool, fp, impl="reference")
+    pal = mechanical_forces(spec, index, pool, fp, impl="pallas")
+    np.testing.assert_allclose(np.asarray(pal), np.asarray(ref), rtol=1e-4, atol=1e-5)
+
+
+def test_engine_diffusion_pallas_matches_reference():
+    g = make_grid(0.0, 40.0, 16, diffusion_coefficient=0.8, decay_constant=0.01)
+    g = increase_concentration(g, jnp.array([[20.0, 20.0, 20.0]]), jnp.array([50.0]))
+    ref = g
+    pal = g
+    for _ in range(5):
+        ref = diffuse(ref, 0.5, impl="reference")
+        pal = diffuse(pal, 0.5, impl="pallas")
+    np.testing.assert_allclose(
+        np.asarray(pal.concentration), np.asarray(ref.concentration),
+        rtol=1e-6, atol=1e-7,
+    )
+
+
+def test_full_sim_with_pallas_kernels():
+    """A short simulation entirely on kernel paths stays finite and
+    conserves the population."""
+    rng = np.random.default_rng(1)
+    pos = jnp.asarray(rng.uniform(0, 16, (60, 3)), jnp.float32)
+    pool = make_pool(64, pos, diameter=1.5)
+    config = EngineConfig(
+        spec=spec_for_space(0.0, 16.0, 2.0, max_per_cell=64),
+        behaviors=(),
+        force_params=ForceParams(),
+        dt=0.1,
+        min_bound=0.0,
+        max_bound=16.0,
+        boundary="closed",
+        force_impl="pallas",
+        diffusion_impl="pallas",
+    )
+    state = init_state(pool, seed=2)
+    final, _ = run_jit(config, state, 5)
+    assert int(final.pool.num_alive()) == 60
+    p = np.asarray(final.pool.position)
+    assert np.isfinite(p).all()

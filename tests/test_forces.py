@@ -1,0 +1,96 @@
+"""Mechanical force tests (Eq 4.1, §5.5)."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (
+    ForceParams,
+    build_index,
+    make_pool,
+    mechanical_forces,
+    pair_force,
+    spec_for_space,
+)
+from repro.core.forces import update_static_flags
+from repro.core.grid import candidate_neighbors
+
+
+def test_pair_force_magnitude_matches_eq41():
+    """F_N = kδ − γ√(r̄δ) along the center line."""
+    k, gamma = 2.0, 1.0
+    params = ForceParams(repulsion_k=k, attraction_gamma=gamma)
+    r1 = r2 = 0.5
+    dist = 0.8
+    dx = jnp.array([dist, 0.0, 0.0])
+    f = pair_force(dx, jnp.float32(r1), jnp.float32(r2), params)
+    delta = r1 + r2 - dist
+    rbar = r1 * r2 / (r1 + r2)
+    expected = k * delta - gamma * np.sqrt(rbar * delta)
+    np.testing.assert_allclose(float(f[0]), expected, rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(f[1:]), 0.0, atol=1e-7)
+
+
+def test_no_force_without_overlap():
+    params = ForceParams()
+    f = pair_force(jnp.array([3.0, 0.0, 0.0]), jnp.float32(1.0), jnp.float32(1.0), params)
+    np.testing.assert_allclose(np.asarray(f), 0.0)
+
+
+@settings(deadline=None, max_examples=15)
+@given(n=st.integers(2, 60), seed=st.integers(0, 2**31 - 1))
+def test_newtons_third_law_property(n, seed):
+    """Σ forces = 0 for any configuration (momentum conservation)."""
+    rng = np.random.default_rng(seed)
+    pos = rng.uniform(0, 20, (n, 3)).astype(np.float32)
+    pool = make_pool(n, jnp.asarray(pos), diameter=3.0)
+    spec = spec_for_space(0.0, 20.0, 3.0, max_per_cell=n)
+    index = build_index(spec, pool)
+    f = mechanical_forces(spec, index, pool, ForceParams())
+    np.testing.assert_allclose(np.asarray(f.sum(0)), 0.0, atol=1e-3)
+
+
+def test_static_omission_parity():
+    """Work-compacted evaluation (§5.5) must equal the dense evaluation."""
+    rng = np.random.default_rng(3)
+    pos = rng.uniform(0, 30, (80, 3)).astype(np.float32)
+    pool = make_pool(96, jnp.asarray(pos), diameter=4.0)
+    # mark half the agents static; compaction only affects which get computed
+    static = jnp.asarray(rng.random(96) < 0.5)
+    pool_s = pool.replace(static=static & pool.alive)
+    spec = spec_for_space(0.0, 30.0, 4.0, max_per_cell=96)
+    index = build_index(spec, pool_s)
+    dense = mechanical_forces(spec, index, pool_s.replace(static=jnp.zeros(96, bool)), ForceParams())
+    compacted = mechanical_forces(spec, index, pool_s, ForceParams(), active_capacity=96)
+    # non-static agents must match exactly; static agents are zeroed by design
+    active = np.asarray(pool_s.alive & ~pool_s.static)
+    np.testing.assert_allclose(
+        np.asarray(compacted)[active], np.asarray(dense)[active], rtol=1e-5, atol=1e-6
+    )
+
+
+def test_static_omission_overflow_fallback():
+    """If actives exceed the bound, the full evaluation is used (correctness)."""
+    rng = np.random.default_rng(4)
+    pos = rng.uniform(0, 10, (40, 3)).astype(np.float32)
+    pool = make_pool(48, jnp.asarray(pos), diameter=3.0)  # everything active
+    spec = spec_for_space(0.0, 10.0, 3.0, max_per_cell=48)
+    index = build_index(spec, pool)
+    dense = mechanical_forces(spec, index, pool, ForceParams())
+    small_bound = mechanical_forces(spec, index, pool, ForceParams(), active_capacity=4)
+    np.testing.assert_allclose(np.asarray(small_bound), np.asarray(dense), rtol=1e-5)
+
+
+def test_static_flag_detection():
+    """An isolated unmoved agent becomes static; a moved one does not."""
+    pos = jnp.array([[5.0, 5, 5], [15.0, 15, 15]], jnp.float32)
+    pool = make_pool(4, pos, diameter=1.0)
+    spec = spec_for_space(0.0, 20.0, 2.0)
+    index = build_index(spec, pool)
+    cand, mask = candidate_neighbors(spec, index, pool)
+    disp = jnp.array([[0.0, 0, 0], [1.0, 0, 0], [0, 0, 0], [0, 0, 0]], jnp.float32)
+    new = update_static_flags(pool, disp, cand, mask, ForceParams())
+    assert bool(new.static[0])       # did not move, no moving neighbors
+    assert not bool(new.static[1])   # moved
+    assert not bool(new.static[2])   # dead slots are never static

@@ -1,0 +1,103 @@
+"""Uniform-grid neighbor search tests (§5.3.1, §5.4.2)."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (
+    build_index,
+    candidate_neighbors,
+    make_pool,
+    sort_agents,
+    spec_for_space,
+)
+from repro.core.grid import GridSpec
+from repro.core import morton
+
+
+def test_morton_roundtrip():
+    xs = jnp.arange(0, 1024, 37, dtype=jnp.uint32)
+    ys = (xs * 7) % 1024
+    zs = (xs * 13) % 1024
+    codes = morton.encode3(xs, ys, zs)
+    rx, ry, rz = morton.decode3(codes)
+    np.testing.assert_array_equal(np.asarray(rx), np.asarray(xs))
+    np.testing.assert_array_equal(np.asarray(ry), np.asarray(ys))
+    np.testing.assert_array_equal(np.asarray(rz), np.asarray(zs))
+
+
+def test_morton_locality():
+    """Agents in the same cell share a code; adjacent cells differ little in
+    expectation — test the weaker exact property: same cell ⇒ same code."""
+    a = morton.encode3(jnp.uint32(5), jnp.uint32(6), jnp.uint32(7))
+    b = morton.encode3(jnp.uint32(5), jnp.uint32(6), jnp.uint32(7))
+    assert int(a) == int(b)
+    c = morton.encode3(jnp.uint32(5), jnp.uint32(6), jnp.uint32(8))
+    assert int(a) != int(c)
+
+
+def _brute_force_neighbors(pos, radius):
+    d2 = ((pos[:, None, :] - pos[None, :, :]) ** 2).sum(-1)
+    n = pos.shape[0]
+    within = (d2 <= radius**2) & ~np.eye(n, dtype=bool)
+    return within
+
+
+@settings(deadline=None, max_examples=20)
+@given(
+    n=st.integers(2, 120),
+    seed=st.integers(0, 2**31 - 1),
+    use_morton=st.booleans(),
+)
+def test_neighbor_completeness_property(n, seed, use_morton):
+    """Every true neighbor within the interaction radius must appear in the
+    candidate set (the grid may over-approximate, never under)."""
+    rng = np.random.default_rng(seed)
+    radius = 4.0
+    pos = rng.uniform(0, 40, (n, 3)).astype(np.float32)
+    pool = make_pool(n + 8, jnp.asarray(pos), diameter=1.0)
+    spec = spec_for_space(0.0, 40.0, radius, max_per_cell=n + 8, use_morton=use_morton)
+    index = build_index(spec, pool)
+    assert not bool(index.overflowed)
+    cand, mask = candidate_neighbors(spec, index, pool)
+    cand, mask = np.asarray(cand), np.asarray(mask)
+    within = _brute_force_neighbors(pos, radius)
+    for i in range(n):
+        found = set(cand[i][mask[i]].tolist())
+        required = set(np.nonzero(within[i])[0].tolist())
+        assert required.issubset(found), f"agent {i} missing {required - found}"
+
+
+def test_overflow_detection():
+    pos = jnp.zeros((10, 3)) + 5.0  # all agents in one cell
+    pool = make_pool(16, pos)
+    spec = GridSpec(origin=(0, 0, 0), box_size=10.0, dims=(4, 4, 4), max_per_cell=4)
+    index = build_index(spec, pool)
+    assert bool(index.overflowed)
+    assert int(index.cell_count.max()) == 10
+
+
+def test_sort_agents_groups_cells():
+    rng = np.random.default_rng(1)
+    pos = rng.uniform(0, 64, (200, 3)).astype(np.float32)
+    pool = make_pool(256, jnp.asarray(pos))
+    spec = spec_for_space(0.0, 64.0, 8.0)
+    sorted_pool = sort_agents(spec, pool)
+    # dead agents at the back
+    alive = np.asarray(sorted_pool.alive)
+    assert alive[:200].all() and not alive[200:].any()
+    # agents in the same cell are contiguous after sorting
+    from repro.core.grid import cell_coords, sort_key
+
+    keys = np.asarray(sort_key(spec, cell_coords(spec, sorted_pool.position)))[:200]
+    assert (np.diff(keys.astype(np.int64)) >= 0).all()
+
+
+def test_cell_counts_match_population():
+    rng = np.random.default_rng(2)
+    pos = rng.uniform(0, 32, (100, 3)).astype(np.float32)
+    pool = make_pool(128, jnp.asarray(pos))
+    spec = spec_for_space(0.0, 32.0, 4.0)
+    index = build_index(spec, pool)
+    assert int(index.cell_count.sum()) == 100

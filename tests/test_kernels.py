@@ -1,0 +1,173 @@
+"""Per-kernel validation: sweep shapes/dtypes, assert_allclose vs ref.py.
+
+All Pallas kernels execute in interpret mode (CPU container; TPU is the
+lowering target)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.diffusion3d import ops as d3_ops
+from repro.kernels.flash_attention import ops as fa_ops
+from repro.kernels.pairwise_force import ops as pf_ops
+
+
+# ---------------------------------------------------------------- pairwise
+
+@pytest.mark.parametrize("n,kdim", [(16, 8), (100, 50), (128, 128), (200, 27), (300, 200)])
+def test_pairwise_force_shapes(n, kdim):
+    rng = np.random.default_rng(n * 1000 + kdim)
+    pos = jnp.asarray(rng.uniform(0, 10, (n, 3)), jnp.float32)
+    rad = jnp.asarray(rng.uniform(0.5, 1.5, (n,)), jnp.float32)
+    cand = jnp.asarray(rng.integers(0, n, (n, kdim)), jnp.int32)
+    mask = jnp.asarray(rng.random((n, kdim)) < 0.7)
+    ref = pf_ops.pairwise_force(pos, rad, cand, mask, impl="reference")
+    pal = pf_ops.pairwise_force(pos, rad, cand, mask, impl="pallas")
+    np.testing.assert_allclose(np.asarray(pal), np.asarray(ref), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("k,gamma", [(2.0, 1.0), (5.0, 0.0), (1.0, 3.0)])
+def test_pairwise_force_params(k, gamma):
+    rng = np.random.default_rng(11)
+    pos = jnp.asarray(rng.uniform(0, 5, (64, 3)), jnp.float32)
+    rad = jnp.asarray(rng.uniform(0.5, 2.0, (64,)), jnp.float32)
+    cand = jnp.asarray(rng.integers(0, 64, (64, 32)), jnp.int32)
+    mask = jnp.ones((64, 32), bool)
+    ref = pf_ops.pairwise_force(pos, rad, cand, mask, k=k, gamma=gamma, impl="reference")
+    pal = pf_ops.pairwise_force(pos, rad, cand, mask, k=k, gamma=gamma, impl="pallas")
+    np.testing.assert_allclose(np.asarray(pal), np.asarray(ref), rtol=1e-5, atol=1e-5)
+
+
+def test_pairwise_force_all_masked():
+    pos = jnp.zeros((32, 3))
+    rad = jnp.ones((32,))
+    cand = jnp.zeros((32, 16), jnp.int32)
+    mask = jnp.zeros((32, 16), bool)
+    out = pf_ops.pairwise_force(pos, rad, cand, mask, impl="pallas")
+    np.testing.assert_allclose(np.asarray(out), 0.0)
+
+
+# ---------------------------------------------------------------- diffusion
+
+@pytest.mark.parametrize("shape", [(8, 8, 8), (13, 16, 24), (32, 16, 8), (5, 5, 5)])
+def test_diffusion3d_shapes(shape):
+    rng = np.random.default_rng(sum(shape))
+    u = jnp.asarray(rng.random(shape), jnp.float32)
+    ref = d3_ops.diffusion_step(u, 0.05, 0.01, impl="reference")
+    pal = d3_ops.diffusion_step(u, 0.05, 0.01, impl="pallas")
+    np.testing.assert_allclose(np.asarray(pal), np.asarray(ref), rtol=1e-6, atol=1e-6)
+
+
+def test_diffusion3d_no_decay_conserves_interior():
+    u = jnp.zeros((16, 16, 16)).at[8, 8, 8].set(100.0)
+    for _ in range(5):
+        u = d3_ops.diffusion_step(u, 0.1, 0.0, impl="pallas")
+    np.testing.assert_allclose(float(u.sum()), 100.0, rtol=1e-5)
+
+
+# ---------------------------------------------------------------- attention
+
+def _qkv(rng, b, hq, hkv, tq, tk, d, dtype):
+    q = jnp.asarray(rng.normal(0, 1, (b, hq, tq, d)), dtype)
+    k = jnp.asarray(rng.normal(0, 1, (b, hkv, tk, d)), dtype)
+    v = jnp.asarray(rng.normal(0, 1, (b, hkv, tk, d)), dtype)
+    return q, k, v
+
+
+@pytest.mark.parametrize(
+    "b,hq,hkv,tq,tk,d",
+    [
+        (1, 2, 2, 64, 64, 32),     # MHA
+        (2, 4, 2, 70, 70, 32),     # GQA, ragged vs block
+        (1, 8, 1, 128, 128, 64),   # MQA
+        (1, 4, 4, 33, 129, 16),    # odd lengths, cross Tq≠Tk
+    ],
+)
+@pytest.mark.parametrize("impl", ["pallas", "chunked"])
+def test_flash_attention_shapes(b, hq, hkv, tq, tk, d, impl):
+    rng = np.random.default_rng(tq * tk)
+    q, k, v = _qkv(rng, b, hq, hkv, tq, tk, d, jnp.float32)
+    ref = fa_ops.flash_attention(q, k, v, causal=False, impl="reference")
+    out = fa_ops.flash_attention(q, k, v, causal=False, impl=impl, block_q=32, block_k=32)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-4, atol=2e-5)
+
+
+@pytest.mark.parametrize("impl", ["pallas", "chunked"])
+@pytest.mark.parametrize("window", [None, 16])
+def test_flash_attention_causal_window(impl, window):
+    rng = np.random.default_rng(5)
+    q, k, v = _qkv(rng, 2, 4, 2, 96, 96, 32, jnp.float32)
+    ref = fa_ops.flash_attention(q, k, v, causal=True, window=window, impl="reference")
+    out = fa_ops.flash_attention(
+        q, k, v, causal=True, window=window, impl=impl, block_q=32, block_k=32
+    )
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-4, atol=2e-5)
+
+
+@pytest.mark.parametrize("impl", ["pallas", "chunked"])
+def test_flash_attention_decode_step(impl):
+    """tq=1 against a long KV cache with absolute-position offset."""
+    rng = np.random.default_rng(6)
+    q, k, v = _qkv(rng, 2, 8, 2, 1, 256, 64, jnp.float32)
+    ref = fa_ops.flash_attention(q, k, v, causal=True, kv_offset=255, impl="reference")
+    out = fa_ops.flash_attention(
+        q, k, v, causal=True, kv_offset=255, impl=impl, block_q=32, block_k=64
+    )
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-4, atol=2e-5)
+
+
+def test_flash_attention_bf16():
+    rng = np.random.default_rng(7)
+    q, k, v = _qkv(rng, 1, 4, 2, 64, 64, 32, jnp.bfloat16)
+    ref = fa_ops.flash_attention(q, k, v, causal=True, impl="reference")
+    out = fa_ops.flash_attention(q, k, v, causal=True, impl="pallas", block_q=32, block_k=32)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), rtol=2e-2, atol=2e-2
+    )
+
+
+def test_flash_attention_matches_softmax_rowsum():
+    """Property: output rows are convex combinations of V rows (weights sum
+    to 1), so attending to constant V returns that constant."""
+    rng = np.random.default_rng(8)
+    q, k, _ = _qkv(rng, 1, 2, 2, 40, 40, 16, jnp.float32)
+    v = jnp.ones((1, 2, 40, 16), jnp.float32) * 3.5
+    out = fa_ops.flash_attention(q, k, v, causal=True, impl="pallas", block_q=32, block_k=32)
+    np.testing.assert_allclose(np.asarray(out), 3.5, rtol=1e-5)
+
+
+# ----------------------------------------------------------------- rmsnorm
+
+from repro.kernels.rmsnorm import ops as rms_ops
+
+
+@pytest.mark.parametrize("shape", [(8, 64), (100, 128), (3, 17, 256), (513, 384)])
+@pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
+def test_rmsnorm_shapes_dtypes(shape, dtype):
+    import jax.numpy as jnp
+
+    dt = jnp.float32 if dtype == "float32" else jnp.bfloat16
+    rng = np.random.default_rng(sum(shape))
+    x = jnp.asarray(rng.normal(0, 2, shape), dt)
+    s = jnp.asarray(rng.normal(1, 0.2, shape[-1:]), jnp.float32)
+    ref = rms_ops.rmsnorm(x, s, impl="reference")
+    pal = rms_ops.rmsnorm(x, s, impl="pallas")
+    rtol = 2e-2 if dtype == "bfloat16" else 1e-5
+    np.testing.assert_allclose(
+        np.asarray(pal, np.float32), np.asarray(ref, np.float32), rtol=rtol, atol=1e-5
+    )
+
+
+def test_rmsnorm_matches_model_layer():
+    """The kernel must agree with the model's norm_apply (rmsnorm path)."""
+    import jax.numpy as jnp
+
+    from repro.models.layers import norm_apply
+
+    rng = np.random.default_rng(9)
+    x = jnp.asarray(rng.normal(0, 1, (4, 32, 128)), jnp.float32)
+    s = jnp.asarray(rng.normal(1, 0.1, (128,)), jnp.float32)
+    model_out = norm_apply({"scale": s}, x, "rmsnorm")
+    kernel_out = rms_ops.rmsnorm(x, s, impl="pallas")
+    np.testing.assert_allclose(np.asarray(kernel_out), np.asarray(model_out), rtol=1e-5, atol=1e-6)

@@ -1,0 +1,128 @@
+"""Hypothesis property tests on system-level invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (
+    EngineConfig,
+    ForceParams,
+    brownian_motion,
+    init_state,
+    make_pool,
+    random_movement,
+    run_jit,
+    simulation_step,
+    spec_for_space,
+)
+
+
+@settings(deadline=None, max_examples=8)
+@given(
+    n=st.integers(4, 60),
+    steps=st.integers(1, 6),
+    seed=st.integers(0, 2**31 - 1),
+    boundary=st.sampled_from(["closed", "toroidal"]),
+)
+def test_population_invariant_without_birth_death(n, steps, seed, boundary):
+    """No birth/death behaviors ⇒ population is exactly conserved for any
+    configuration, step count, and boundary condition."""
+    rng = np.random.default_rng(seed)
+    pos = rng.uniform(0, 30, (n, 3)).astype(np.float32)
+    pool = make_pool(n + 8, jnp.asarray(pos), diameter=1.0)
+    config = EngineConfig(
+        spec=spec_for_space(0.0, 30.0, 3.0, max_per_cell=n + 8),
+        behaviors=(random_movement(1.5),),
+        force_params=ForceParams(),
+        dt=0.2,
+        min_bound=0.0,
+        max_bound=30.0,
+        boundary=boundary,
+    )
+    final, _ = run_jit(config, init_state(pool, seed=seed % 1000), steps)
+    assert int(final.pool.num_alive()) == n
+    p = np.asarray(final.pool.position)[np.asarray(final.pool.alive)]
+    assert np.isfinite(p).all()
+    if boundary == "toroidal":
+        assert (p >= 0).all() and (p < 30).all()
+
+
+@settings(deadline=None, max_examples=8)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_forces_are_translation_invariant(seed):
+    """Shifting every agent by a constant leaves forces unchanged."""
+    from repro.core import build_index, mechanical_forces
+
+    rng = np.random.default_rng(seed)
+    n = 30
+    pos = rng.uniform(5, 15, (n, 3)).astype(np.float32)
+    shift = np.float32(rng.uniform(0, 4))
+    params = ForceParams()
+
+    def forces(p, lo, hi):
+        pool = make_pool(n, jnp.asarray(p), diameter=2.0)
+        spec = spec_for_space(lo, hi, 2.5, max_per_cell=n)
+        return np.asarray(
+            mechanical_forces(spec, build_index(spec, pool), pool, params)
+        )
+
+    f0 = forces(pos, 0.0, 25.0)
+    f1 = forces(pos + shift, float(shift), 25.0 + float(shift))
+    np.testing.assert_allclose(f1, f0, rtol=1e-4, atol=1e-5)
+
+
+@settings(deadline=None, max_examples=6)
+@given(seed=st.integers(0, 2**31 - 1), sort_freq=st.sampled_from([0, 1, 4]))
+def test_sorting_does_not_change_physics(seed, sort_freq):
+    """§5.4.2: the Morton sort is a pure layout transform — the *set* of
+    (position, kind) states after a step is identical with or without it."""
+    rng = np.random.default_rng(seed)
+    n = 40
+    pos = rng.uniform(0, 20, (n, 3)).astype(np.float32)
+    pool = make_pool(n, jnp.asarray(pos), diameter=1.5)
+
+    def end_state(freq):
+        config = EngineConfig(
+            spec=spec_for_space(0.0, 20.0, 2.0, max_per_cell=n),
+            behaviors=(),
+            force_params=ForceParams(),
+            dt=0.1,
+            min_bound=0.0,
+            max_bound=20.0,
+            boundary="closed",
+            sort_frequency=freq,
+        )
+        final, _ = run_jit(config, init_state(pool, seed=1), 5)
+        p = np.asarray(final.pool.position)[np.asarray(final.pool.alive)]
+        return p[np.lexsort(p.T)]
+
+    np.testing.assert_allclose(end_state(sort_freq), end_state(0), rtol=1e-4, atol=1e-4)
+
+
+@settings(deadline=None, max_examples=10)
+@given(
+    b=st.integers(1, 3),
+    t=st.integers(4, 40),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_attention_causality_property(b, t, seed):
+    """Perturbing token j must not change outputs at positions < j."""
+    from repro.kernels.flash_attention import ops as fa_ops
+
+    rng = np.random.default_rng(seed)
+    h, d = 2, 16
+    q = jnp.asarray(rng.normal(0, 1, (b, h, t, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(0, 1, (b, h, t, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(0, 1, (b, h, t, d)), jnp.float32)
+    out0 = fa_ops.flash_attention(q, k, v, causal=True, impl="chunked",
+                                  block_q=8, block_k=8)
+    j = t // 2
+    k2 = k.at[:, :, j:].add(3.0)
+    v2 = v.at[:, :, j:].add(-2.0)
+    out1 = fa_ops.flash_attention(q, k2, v2, causal=True, impl="chunked",
+                                  block_q=8, block_k=8)
+    np.testing.assert_allclose(
+        np.asarray(out0[:, :, :j]), np.asarray(out1[:, :, :j]), rtol=1e-5, atol=1e-5
+    )

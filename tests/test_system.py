@@ -1,0 +1,45 @@
+"""End-to-end system behaviour: the two workload types share one runtime."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def test_abm_and_lm_coexist_end_to_end():
+    """One process: run an ABM segment, then an LM train step, then resume
+    the ABM — exercising that the two stacks share jit/runtime state
+    cleanly (the 'one framework, two workloads' claim)."""
+    from repro.core import (
+        EngineConfig, ForceParams, brownian_motion, init_state, make_pool,
+        run_jit, spec_for_space,
+    )
+    from repro import training
+    from repro.configs import reduced_config
+    from repro.data import DataConfig, host_batch
+    from repro.models.model import build_model
+    from repro.optim import adamw
+
+    rng = np.random.default_rng(0)
+    pool = make_pool(64, jnp.asarray(rng.uniform(0, 20, (50, 3)), jnp.float32),
+                     diameter=1.5)
+    ecfg = EngineConfig(
+        spec=spec_for_space(0.0, 20.0, 2.0, max_per_cell=64),
+        behaviors=(brownian_motion(0.1),),
+        force_params=ForceParams(),
+        dt=0.1, min_bound=0.0, max_bound=20.0, boundary="closed",
+    )
+    state = init_state(pool, seed=1)
+    state, _ = run_jit(ecfg, state, 5)
+    assert int(state.pool.num_alive()) == 50
+
+    cfg = reduced_config("rwkv6-1.6b")
+    model = build_model(cfg)
+    tstate, _ = training.init_train_state(model, jax.random.PRNGKey(0))
+    step = jax.jit(training.make_train_step(model, adamw.AdamWConfig()))
+    batch = {k: jnp.asarray(v) for k, v in
+             host_batch(DataConfig(batch=2, seq_len=16), cfg, 0).items()}
+    tstate, metrics = step(tstate, batch)
+    assert bool(jnp.isfinite(metrics["loss"]))
+
+    state, _ = run_jit(ecfg, state, 5)
+    assert int(state.pool.num_alive()) == 50

@@ -1,0 +1,44 @@
+"""Faithful-reproduction validation: the paper's own correctness claims.
+
+These are the tests that certify the *reproduction* (DESIGN.md §7):
+  * SIR agent-based model matches the Kermack–McKendrick analytical
+    solution (Fig 4.17 / §4.6.3);
+  * soma clustering emerges (Fig 4.18 / §4.7.1);
+  * diffusion converges to the analytical point source (Fig 4.9) —
+    covered in tests/test_diffusion.py;
+  * distributed == single-node physics (§6.3.3) — covered in
+    tests/test_distributed.py.
+"""
+
+import os
+import sys
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "examples"))
+
+
+@pytest.mark.slow
+def test_sir_matches_analytical():
+    import epidemiology_sir
+
+    rmse = epidemiology_sir.main(["--fast"])
+    assert rmse < 0.08
+
+
+@pytest.mark.slow
+def test_soma_clustering_emerges():
+    import quickstart
+
+    before, after = quickstart.main(n_cells=400, steps=200, space=90.0)
+    assert after > before + 0.15
+
+
+@pytest.mark.slow
+def test_neurite_growth_arborizes():
+    import neurite_growth
+
+    alive, static_frac = neurite_growth.main(n_neurons=8, steps=100)
+    assert alive > 8 * 40
+    assert static_frac > 0.6
