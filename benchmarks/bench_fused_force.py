@@ -1,0 +1,185 @@
+"""Fused cell-list force pass vs the dense candidate paths (DESIGN.md §4).
+
+Two levels, both accounted with ``jax.jit(...).lower().compile().
+cost_analysis()`` ("bytes accessed" — the HBM-traffic proxy the BioDynaMo /
+PhysiCell analyses say actually limits the force pass) plus median wall time:
+
+  * stage level — just the force evaluation from a built index:
+      dense:  (N, 27M) candidate build + (N, K, 3) gather + jnp force chain
+      tiled:  same candidates, lax.map over agent tiles (bounded working set)
+      fused:  repro.kernels.cell_force straight from the cell list
+  * step level — one full ``simulation_step``:
+      seed:   emulation of the seed dataflow (candidates built TWICE — once
+              in the step, once in mechanical_forces — plus the (N, 27M)
+              static-flag gather), the baseline the acceptance ratio is
+              against
+      dense:  today's reference path (duplicate-candidate fix included)
+      fused:  force_impl="fused" with the overflow fallback disabled (the
+              max_per_cell bound is guaranteed by construction here;
+              cost_analysis counts both lax.cond branches, so leaving the
+              fallback in would bill the dense path it exists to avoid —
+              the `step_fused_fallback` variant keeps it for reference)
+
+Acceptance (ISSUE 1): step-level bytes ratio seed/fused ≥ 3 at N=8192,
+max_per_cell=16.
+"""
+
+import functools
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+from benchmarks.common import print_table, save_result, timeit
+
+from repro.core import EngineConfig, ForceParams, init_state, make_pool, simulation_step
+from repro.core.forces import (
+    forces_from_candidates,
+    forces_from_candidates_tiled,
+    update_static_flags,
+)
+from repro.core.grid import build_index, candidate_neighbors, spec_for_space
+from repro.kernels.cell_force import ops as cf_ops
+
+N = int(os.environ.get("BENCH_N", 8192))
+MAX_PER_CELL = int(os.environ.get("BENCH_M", 16))
+SPACE = 100.0
+RADIUS = 6.25  # -> 16^3 cells at SPACE=100: ~2 agents/cell mean at N=8192
+
+
+def _bytes_accessed(jitted, *args):
+    ca = jitted.lower(*args).compile().cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    return float(ca["bytes accessed"])
+
+
+def _setup():
+    rng = np.random.default_rng(0)
+    pos = rng.uniform(0, SPACE, (N, 3)).astype(np.float32)
+    diam = rng.uniform(2.0, 6.0, (N,)).astype(np.float32)
+    pool = make_pool(N, jnp.asarray(pos), diameter=jnp.asarray(diam))
+    spec = spec_for_space(0.0, SPACE, RADIUS, max_per_cell=MAX_PER_CELL)
+    return pool, spec
+
+
+# ------------------------------------------------------------- stage level
+
+def _stage_fns(spec, params):
+    def dense(pool, index):
+        cand, mask = candidate_neighbors(spec, index, pool)
+        return forces_from_candidates(pool.position, pool.radius(), cand, mask, params)
+
+    def tiled(pool, index):
+        cand, mask = candidate_neighbors(spec, index, pool)
+        return forces_from_candidates_tiled(
+            pool.position, pool.radius(), cand, mask, params,
+            pool.position, pool.radius(), tile=512, unroll=False,
+        )
+
+    def fused(pool, index):
+        return cf_ops.cell_list_force(
+            pool.position, pool.radius(), index.cell_list, spec.dims,
+            k=params.repulsion_k, gamma=params.attraction_gamma,
+        )
+
+    return {"dense": dense, "tiled": tiled, "fused": fused}
+
+
+# -------------------------------------------------------------- step level
+
+def _seed_step(spec, params, pool_state):
+    """The seed engine's force-step dataflow: candidates materialized twice
+    (simulation_step + mechanical_forces) and (N, 27M) static detection."""
+    pool = pool_state
+    index = build_index(spec, pool)
+    cand, cand_mask = candidate_neighbors(spec, index, pool)       # step copy
+    cand2, mask2 = candidate_neighbors(spec, index, pool)          # forces copy
+    force = forces_from_candidates(pool.position, pool.radius(), cand2, mask2, params)
+    force = jnp.where(pool.alive[:, None], force, 0.0)
+    new_pos = jnp.clip(pool.position + force * 0.1, 0.0, SPACE)
+    disp = new_pos - pool.position
+    pool = pool.replace(position=new_pos)
+    pool = update_static_flags(pool, disp, cand, cand_mask, params)
+    return pool.replace(age=pool.age + jnp.where(pool.alive, 0.1, 0.0))
+
+
+def _engine_step(spec, impl, fallback):
+    config = EngineConfig(
+        spec=spec,
+        force_params=ForceParams(),
+        dt=0.1,
+        min_bound=0.0,
+        max_bound=SPACE,
+        boundary="closed",
+        sort_frequency=0,
+        force_impl=impl,
+        fused_overflow_fallback=fallback,
+    )
+    return functools.partial(simulation_step, config)
+
+
+def run(fast: bool = True):
+    pool, spec = _setup()
+    params = ForceParams()
+    index = build_index(spec, pool)
+    assert not bool(index.overflowed), "benchmark grid overflowed; raise BENCH_M"
+    out = {
+        "config": {
+            "n": N, "max_per_cell": MAX_PER_CELL, "dims": list(spec.dims),
+            "candidates_k": 27 * MAX_PER_CELL,
+        },
+        "stage": {}, "step": {},
+        "note": (
+            "bytes_accessed is the target metric: the Pallas kernel runs in "
+            "interpret mode on this CPU container, so fused wall_s reflects "
+            "the interpreter's emulated grid loop, not the Mosaic lowering "
+            "the kernel targets; the dense paths are native XLA:CPU."
+        ),
+    }
+
+    rows = []
+    for name, fn in _stage_fns(spec, params).items():
+        jitted = jax.jit(fn)
+        b = _bytes_accessed(jitted, pool, index)
+        t = timeit(jitted, pool, index, warmup=1, iters=3)
+        out["stage"][name] = {"bytes_accessed": b, "wall_s": t}
+        rows.append((f"stage/{name}", f"{b/1e6:.1f}", f"{t*1e3:.1f}"))
+
+    state = init_state(pool, seed=0)
+    steps = {
+        "seed": (jax.jit(functools.partial(_seed_step, spec, params)), (pool,)),
+        "dense": (jax.jit(_engine_step(spec, "reference", True)), (state,)),
+        "fused": (jax.jit(_engine_step(spec, "fused", False)), (state,)),
+        "fused_fallback": (jax.jit(_engine_step(spec, "fused", True)), (state,)),
+    }
+    for name, (jitted, args) in steps.items():
+        b = _bytes_accessed(jitted, *args)
+        t = timeit(jitted, *args, warmup=1, iters=3)
+        out["step"][name] = {"bytes_accessed": b, "wall_s": t}
+        rows.append((f"step/{name}", f"{b/1e6:.1f}", f"{t*1e3:.1f}"))
+
+    out["ratios"] = {
+        "step_bytes_seed_over_fused":
+            out["step"]["seed"]["bytes_accessed"] / out["step"]["fused"]["bytes_accessed"],
+        "step_bytes_dense_over_fused":
+            out["step"]["dense"]["bytes_accessed"] / out["step"]["fused"]["bytes_accessed"],
+        "stage_bytes_dense_over_fused":
+            out["stage"]["dense"]["bytes_accessed"] / out["stage"]["fused"]["bytes_accessed"],
+    }
+    print_table(
+        f"fused cell-list force (N={N}, M={MAX_PER_CELL}, dims={spec.dims})",
+        rows, ["variant", "MB accessed", "ms"],
+    )
+    for k, v in out["ratios"].items():
+        print(f"{k}: {v:.2f}x")
+    path = save_result("fused_force", out)
+    print("saved:", path)
+    return out
+
+
+if __name__ == "__main__":
+    run(fast="--full" not in sys.argv)

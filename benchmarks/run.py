@@ -13,6 +13,7 @@
 | bench_scaling         | Fig 6.8/6.9 weak scaling (collective bytes)     |
 | bench_sort_frequency  | Fig 5.14 sorting frequency sweep                |
 | bench_moe_token_sort  | beyond-paper: §5.4.2 sorting → MoE dispatch     |
+| bench_fused_force     | DESIGN.md §4 fused cell-list force HBM bytes    |
 
 Roofline numbers come from `python -m repro.launch.dryrun --all` (separate
 entry point: it needs 512 fake devices).
@@ -27,6 +28,7 @@ from . import (
     bench_ablation,
     bench_complexity,
     bench_delta_encoding,
+    bench_fused_force,
     bench_halo_packing,
     bench_moe_token_sort,
     bench_neighbor_search,
@@ -45,6 +47,7 @@ ALL = {
     "delta_encoding": bench_delta_encoding,
     "scaling": bench_scaling,
     "moe_token_sort": bench_moe_token_sort,
+    "fused_force": bench_fused_force,
 }
 
 

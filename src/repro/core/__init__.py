@@ -4,6 +4,7 @@ Layer map (DESIGN.md §3):
   agents       SoA agent pools, parallel add/remove (§5.3.2)
   morton       space-filling-curve utilities (§5.4.2)
   grid         uniform-grid neighbor index (§5.3.1)
+  neighbors    per-step neighbor dataflow, built once (DESIGN.md §4)
   forces       mechanical contact forces + static omission (§4.5.1, §5.5)
   diffusion    extracellular diffusion, Eq 4.3 (§4.5.2)
   behaviors    the published behavior library (App. D)
@@ -46,8 +47,15 @@ from .engine import (
     run_jit,
     simulation_step,
 )
-from .forces import ForceParams, mechanical_forces, pair_force
+from .forces import (
+    ForceParams,
+    mechanical_forces,
+    pair_force,
+    update_static_flags,
+    update_static_flags_celllist,
+)
 from .grid import GridIndex, GridSpec, build_index, candidate_neighbors, sort_agents, spec_for_space
+from .neighbors import NeighborContext
 
 __all__ = [
     "AgentPool", "add_agents", "compact", "make_pool", "permute", "remove_agents",
@@ -59,6 +67,7 @@ __all__ = [
     "EngineConfig", "SimulationState", "count_kinds", "init_state", "run",
     "run_jit", "simulation_step",
     "ForceParams", "mechanical_forces", "pair_force",
+    "update_static_flags", "update_static_flags_celllist",
     "GridIndex", "GridSpec", "build_index", "candidate_neighbors", "sort_agents",
-    "spec_for_space",
+    "spec_for_space", "NeighborContext",
 ]

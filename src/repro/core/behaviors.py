@@ -28,28 +28,50 @@ import jax.numpy as jnp
 from . import diffusion as dgrid
 from .agents import AgentPool, add_agents, remove_agents
 from .grid import GridIndex, GridSpec
+from .neighbors import NeighborContext
 
 Array = jax.Array
 
 
-@jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
 class StepContext:
-    """Per-iteration environment handed to each behavior."""
+    """Per-iteration environment handed to each behavior.
+
+    Neighbor data lives in one :class:`NeighborContext` built by the engine;
+    ``cand`` / ``cand_mask`` / ``src_position`` / ``src_kind`` delegate to
+    it, so the dense (N, 27M) candidate tensor is materialized only if some
+    behavior actually reads it — and then shared with the force / static-flag
+    stages instead of being rebuilt.  (Plain dataclass, not a pytree: a
+    StepContext lives within one trace of the step function.)
+    """
 
     rng: Array
     grids: Dict[str, dgrid.DiffusionGrid]
-    cand: Array        # (C, K) neighbor candidate ids into the *source* arrays
-    cand_mask: Array   # (C, K)
+    neighbors: NeighborContext
+    dt: Array          # scalar f32
+    step: Array        # scalar i32
+    min_bound: float
+    max_bound: float
+
+    @property
+    def cand(self) -> Array:
+        """(C, K) neighbor candidate ids into the *source* arrays."""
+        return self.neighbors.cand
+
+    @property
+    def cand_mask(self) -> Array:
+        return self.neighbors.cand_mask
+
     # Source arrays the candidate ids index into.  In the single-node engine
     # these are the pool's own arrays; in the distributed engine they are the
     # ghost-extended (local + halo) arrays (§6.2.1).
-    src_position: Array
-    src_kind: Array
-    dt: Array          # scalar f32
-    step: Array        # scalar i32
-    min_bound: float = dataclasses.field(metadata=dict(static=True))
-    max_bound: float = dataclasses.field(metadata=dict(static=True))
+    @property
+    def src_position(self) -> Array:
+        return self.neighbors.src_position
+
+    @property
+    def src_kind(self) -> Array:
+        return self.neighbors.src_kind
 
     def next_rng(self) -> Tuple["StepContext", Array]:
         k1, k2 = jax.random.split(self.rng)

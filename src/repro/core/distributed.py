@@ -58,6 +58,7 @@ from .grid import (
     candidate_neighbors_arrays,
     sort_agents,
 )
+from .neighbors import NeighborContext
 
 try:  # JAX >= 0.6
     from jax import shard_map as _shard_map
@@ -478,6 +479,8 @@ def distributed_step(
     )
 
     # 3. environment over ghost-extended set; queries = local agents only.
+    # (Still the dense candidate path — fused cell-list adoption for the
+    # distributed engine is an open ROADMAP item.)
     index = build_index_arrays(ecfg.spec, g_pos, g_alive)
     cand, cand_mask = candidate_neighbors_arrays(
         ecfg.spec,
@@ -486,14 +489,23 @@ def distributed_step(
         pool.alive,
         query_ids=jnp.arange(pool.capacity, dtype=jnp.int32),
     )
+    neighbors = NeighborContext(
+        spec=ecfg.spec,
+        index=index,
+        src_position=g_pos,
+        src_radius=g_rad,
+        src_kind=g_kind,
+        src_alive=g_alive,
+        query_position=pool.position,
+        query_alive=pool.alive,
+        query_ids=jnp.arange(pool.capacity, dtype=jnp.int32),
+        _cand=(cand, cand_mask),
+    )
 
     ctx = StepContext(
         rng=jax.random.fold_in(jax.random.wrap_key_data(state.rng), state.step),
         grids=dict(state.grids),
-        cand=cand,
-        cand_mask=cand_mask,
-        src_position=g_pos,
-        src_kind=g_kind,
+        neighbors=neighbors,
         dt=jnp.float32(ecfg.dt),
         step=state.step,
         min_bound=0.0,

@@ -25,8 +25,9 @@ import jax.numpy as jnp
 from . import diffusion as dgrid
 from .agents import AgentPool
 from .behaviors import Behavior, StepContext
-from .forces import ForceParams, mechanical_forces, update_static_flags
-from .grid import GridIndex, GridSpec, build_index, candidate_neighbors, sort_agents
+from .forces import ForceParams, mechanical_forces, update_static_flags_celllist
+from .grid import GridIndex, GridSpec, build_index, sort_agents
+from .neighbors import NeighborContext
 
 Array = jax.Array
 
@@ -46,8 +47,18 @@ class EngineConfig:
     diffusion_frequency: int = 1                     # §4.4.4 multi-scale
     active_capacity: Optional[int] = None            # §5.5 work compaction
     force_tile: Optional[int] = None                 # tile-wise force eval
-    force_impl: str = "reference"                    # reference | pallas
+    force_impl: str = "reference"                    # reference | pallas | fused
     diffusion_impl: str = "reference"
+    # "fused" only: lax.cond back to the dense candidate path when a cell
+    # overflows max_per_cell (cell-list truncation would drop pair forces).
+    # Disable only when max_per_cell is a guaranteed bound; that keeps the
+    # dense path out of the compiled step entirely.  (Combining "fused" with
+    # active_capacity keeps §5.5 semantics but the compacted branch still
+    # gathers dense candidate rows — see mechanical_forces.)
+    fused_overflow_fallback: bool = True
+    # Pallas interpret mode for the kernel force impls (CPU-container
+    # default; set False on TPU hardware for the Mosaic lowering).
+    kernel_interpret: bool = True
 
 
 @jax.tree_util.register_dataclass
@@ -92,17 +103,17 @@ def simulation_step(config: EngineConfig, state: SimulationState) -> SimulationS
             do_sort, lambda p: sort_agents(config.spec, p), lambda p: p, pool
         )
 
-    # --- pre standalone op: environment (neighbor index) build.
+    # --- pre standalone op: environment (neighbor index) build.  The dense
+    # (N, 27M) candidate tensor is built lazily by the NeighborContext — at
+    # most once per iteration, shared by behaviors / forces / static flags,
+    # and not at all when every consumer walks the cell list directly.
     index = build_index(config.spec, pool)
-    cand, cand_mask = candidate_neighbors(config.spec, index, pool)
+    neighbors = NeighborContext.for_pool(config.spec, index, pool)
 
     ctx = StepContext(
         rng=jax.random.fold_in(state.rng, state.step),
         grids=dict(state.grids),
-        cand=cand,
-        cand_mask=cand_mask,
-        src_position=pool.position,
-        src_kind=pool.kind,
+        neighbors=neighbors,
         dt=jnp.float32(config.dt),
         step=state.step,
         min_bound=config.min_bound,
@@ -123,15 +134,22 @@ def simulation_step(config: EngineConfig, state: SimulationState) -> SimulationS
             config.force_params,
             active_capacity=config.active_capacity,
             impl=config.force_impl,
+            neighbors=neighbors,
+            fused_fallback=config.fused_overflow_fallback,
+            interpret=config.kernel_interpret,
         )
         pool = pool.replace(position=pool.position + force * config.dt)
 
     pool = pool.replace(position=_apply_boundary(config, pool.position))
 
-    # --- §5.5 static-agent detection for the *next* iteration.
+    # --- §5.5 static-agent detection for the *next* iteration (cell-level:
+    # a (N, 27) gather over per-cell moved bits, not (N, 27M) candidates).
     if config.force_params is not None:
         displacement = pool.position - pre_behavior_pos
-        pool = update_static_flags(pool, displacement, cand, cand_mask, config.force_params)
+        pool = update_static_flags_celllist(
+            config.spec, index, pool, displacement, config.force_params,
+            query_position=neighbors.query_position,
+        )
 
     # --- post standalone op: diffusion (Eq 4.3) at its frequency.
     grids = dict(ctx.grids)

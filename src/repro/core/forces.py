@@ -4,8 +4,11 @@
 
 applied along the center line when agents overlap (δ > 0).  This is the
 dominant operation of the paper's benchmarks (§5.6.3: "mechanical forces"
-takes the largest share of runtime), hence it is the Pallas-kernel hot spot
-(`repro.kernels.pairwise_force`).
+takes the largest share of runtime), hence it is the Pallas-kernel hot spot:
+`repro.kernels.pairwise_force` fuses the force arithmetic over dense
+candidates, and `repro.kernels.cell_force` (``impl="fused"``) additionally
+eliminates the dense candidate tensor by walking the cell list directly
+(DESIGN.md §4).
 
 Static-agent force omission (§5.5): the paper detects agents whose resulting
 force is guaranteed zero-displacement (agent and its whole neighborhood did
@@ -26,7 +29,8 @@ import jax
 import jax.numpy as jnp
 
 from .agents import AgentPool
-from .grid import GridIndex, GridSpec, candidate_neighbors
+from .grid import GridIndex, GridSpec, neighbor_cell_ids
+from .neighbors import NeighborContext
 
 Array = jax.Array
 
@@ -141,27 +145,78 @@ def mechanical_forces(
     params: ForceParams,
     active_capacity: Optional[int] = None,
     impl: str = "reference",
+    neighbors: Optional[NeighborContext] = None,
+    fused_fallback: bool = True,
+    interpret: bool = True,
 ) -> Array:
     """Net mechanical force per agent, (C, 3).
 
     active_capacity: if given, §5.5 work compaction — only agents with
     ``~pool.static`` are evaluated (bounded by this capacity; overflow falls
-    back to the full evaluation).  ``impl`` selects "reference" (pure jnp) or
-    "pallas" (`repro.kernels.pairwise_force`).
+    back to the full evaluation).  ``impl`` selects "reference" (pure jnp),
+    "pallas" (`repro.kernels.pairwise_force` over dense candidates), or
+    "fused" (`repro.kernels.cell_force`, consuming ``index.cell_list``
+    directly — no dense candidate tensor).
+
+    ``neighbors``: the step's :class:`NeighborContext`; built here when
+    absent (standalone calls), passed in by the engine so the dense
+    candidate tensor is materialized at most once per iteration — and, on
+    the fused path, not at all.  ``fused_fallback`` guards the fused path's
+    cell-list truncation: when any cell overflowed ``max_per_cell`` a
+    ``lax.cond`` re-evaluates through the reference candidate path
+    (correctness first, like the §5.5 compaction fallback below).
+    ``interpret`` selects Pallas interpret mode for the kernel impls (the
+    CPU-container default; pass False on TPU for the Mosaic lowering).
+
+    Note: combining ``impl="fused"`` with ``active_capacity`` keeps the
+    §5.5 compaction semantics but not the fused path's byte savings — the
+    compacted branch gathers per-agent *candidate* rows, so the dense
+    tensor is rebuilt inside that branch every step.  Prefer one of the two
+    optimizations per config until the compacted path is cell-list-aware.
     """
-    cand, mask = candidate_neighbors(spec, index, pool)
+    if neighbors is None:
+        neighbors = NeighborContext.for_pool(spec, index, pool)
     radius = pool.radius()
+
+    # Candidate-consuming impls always need the dense tensor somewhere in the
+    # step; build (or reuse) it here, at top trace level, so consumers inside
+    # lax.cond branches below read the cache instead of leaking a sub-trace
+    # build.  The fused path skips this — its only candidate consumers live
+    # inside the overflow-fallback branch and build uncached there, keeping
+    # the dense tensor out of the non-overflow steady state.
+    if impl != "fused":
+        neighbors.candidates()
 
     if impl == "pallas":
         from repro.kernels.pairwise_force import ops as pf_ops
 
         dense = lambda: pf_ops.pairwise_force(
-            pool.position, radius, cand, mask,
+            pool.position, radius, *neighbors.candidates(),
             k=params.repulsion_k, gamma=params.attraction_gamma,
+            interpret=interpret,
         )
+    elif impl == "fused":
+        from repro.kernels.cell_force import ops as cf_ops
+
+        fused = lambda: cf_ops.cell_list_force(
+            pool.position, radius, index.cell_list, spec.dims,
+            k=params.repulsion_k, gamma=params.attraction_gamma,
+            interpret=interpret,
+        )
+        if fused_fallback:
+            dense = lambda: jax.lax.cond(
+                index.overflowed,
+                lambda: forces_from_candidates(
+                    pool.position, radius,
+                    *neighbors.candidates(cache=False), params,
+                ),
+                fused,
+            )
+        else:
+            dense = fused
     else:
         dense = lambda: forces_from_candidates(
-            pool.position, radius, cand, mask, params
+            pool.position, radius, *neighbors.candidates(), params
         )
 
     if active_capacity is None:
@@ -176,6 +231,7 @@ def mechanical_forces(
 
     def compacted_path(_):
         # Deterministic compaction: indices of active agents first (stable).
+        cand, mask = neighbors.candidates(cache=False)
         order = jnp.argsort(~active, stable=True)          # active ids first
         act_ids = order[:a]                                # (A,)
         act_valid = jnp.arange(a) < jnp.minimum(n_active, a)
@@ -217,5 +273,49 @@ def update_static_flags(
     moved = moved & pool.alive
     safe = jnp.where(cand_mask, cand, 0)
     neighbor_moved = jnp.any(jnp.take(moved, safe) & cand_mask, axis=1)
+    static = pool.alive & ~moved & ~neighbor_moved
+    return pool.replace(static=static)
+
+
+def update_static_flags_celllist(
+    spec: GridSpec,
+    index: GridIndex,
+    pool: AgentPool,
+    displacement: Array,
+    params: ForceParams,
+    query_position: Optional[Array] = None,
+) -> AgentPool:
+    """§5.5 static detection through the cell list — no dense candidates.
+
+    Equivalent to :func:`update_static_flags` on the same index:
+    "any candidate moved" is lifted to "any agent in the 27-box moved", via a
+    per-cell any-reduction over ``cell_list`` (O(n_cells·M)) and a (N, 27)
+    cell-level gather — the candidate version's (N, 27·M) gather never
+    exists.  The two differ only in whether *self* counts as a neighbor (an
+    agent that moved is non-static either way), so the flags are identical
+    for agents alive at index-build time.  Agents born mid-step read a real
+    stencil here — at the slot's ``query_position``, i.e. its pre-birth
+    stored value — where the candidate version's build-time mask blanks
+    theirs entirely; that makes this version at least as conservative, but
+    neither evaluates the newborn's true neighborhood (both rely on its
+    birth displacement tripping the ``moved`` test, which a child spawned
+    within tolerance of a dead slot's stale position would evade).
+
+    ``query_position``: the positions the index was built from (defaults to
+    the pool's current positions; the engine passes the step-start positions
+    so the stencil matches the one behaviors and forces saw).
+    """
+    moved = jnp.linalg.norm(displacement, axis=-1) > params.static_tolerance
+    moved = moved & pool.alive
+
+    c = pool.capacity
+    slot_valid = index.cell_list < c
+    safe = jnp.where(slot_valid, index.cell_list, 0)
+    cell_moved = jnp.any(jnp.take(moved, safe) & slot_valid, axis=1)  # (n_cells,)
+
+    qpos = pool.position if query_position is None else query_position
+    nbr_cid, in_range = neighbor_cell_ids(spec, qpos)                 # (N, 27)
+    neighbor_moved = jnp.any(cell_moved[nbr_cid] & in_range, axis=1)
+
     static = pool.alive & ~moved & ~neighbor_moved
     return pool.replace(static=static)

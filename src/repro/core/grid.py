@@ -162,6 +162,21 @@ _NEIGHBOR_OFFSETS = jnp.asarray(
 )  # (27, 3)
 
 
+def neighbor_cell_ids(spec: GridSpec, position: Array) -> tuple[Array, Array]:
+    """27-box stencil cells for each query position.
+
+    Returns ``(nbr_cid, in_range)``: ``(N, 27)`` linear cell ids (clipped
+    into the grid — consult ``in_range`` before trusting a slot) and the
+    ``(N, 27)`` validity mask.  The single definition of the stencil shared
+    by candidate generation and the cell-level static detection.
+    """
+    dims = jnp.asarray(spec.dims, jnp.int32)
+    nbr = cell_coords(spec, position)[:, None, :] + _NEIGHBOR_OFFSETS[None, :, :]
+    in_range = jnp.all((nbr >= 0) & (nbr < dims), axis=-1)
+    nbr_cid = linear_cell_id(spec, jnp.clip(nbr, 0, dims - 1))
+    return nbr_cid, in_range
+
+
 def candidate_neighbors_arrays(
     spec: GridSpec,
     index: GridIndex,
@@ -181,12 +196,7 @@ def candidate_neighbors_arrays(
     """
     n = query_position.shape[0]
     m = spec.max_per_cell
-    dims = jnp.asarray(spec.dims, jnp.int32)
-    ijk = cell_coords(spec, query_position)                      # (N, 3)
-    nbr = ijk[:, None, :] + _NEIGHBOR_OFFSETS[None, :, :]        # (N, 27, 3)
-    in_range = jnp.all((nbr >= 0) & (nbr < dims), axis=-1)       # (N, 27)
-    nbr_clipped = jnp.clip(nbr, 0, dims - 1)
-    nbr_cid = linear_cell_id(spec, nbr_clipped)                  # (N, 27)
+    nbr_cid, in_range = neighbor_cell_ids(spec, query_position)  # (N, 27)
 
     cand = index.cell_list[nbr_cid]                              # (N, 27, M)
     sentinel = index.cell_of_agent.shape[0]                      # indexed capacity

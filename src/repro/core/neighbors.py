@@ -1,0 +1,105 @@
+"""Per-step neighbor dataflow: build once, thread everywhere.
+
+The seed engine materialized the dense ``(N, 27·max_per_cell)`` candidate
+tensor *twice* per iteration — once in ``simulation_step`` for behaviors /
+static detection and again inside ``mechanical_forces`` — and the BioDynaMo /
+PhysiCell performance analyses (arXiv:2301.06984, arXiv:2306.11544) identify
+exactly this neighbor-data movement, not force FLOPs, as the limiter.
+
+:class:`NeighborContext` fixes the dataflow: ``simulation_step`` builds one
+context per iteration around the freshly built :class:`~repro.core.grid.
+GridIndex` and hands it to behaviors (via :class:`~repro.core.behaviors.
+StepContext`), ``mechanical_forces``, and the static-agent update.  The dense
+candidate tensor is *lazy*: it is computed at most once per step, and only if
+some consumer actually asks for it — the fused cell-list force path
+(``EngineConfig.force_impl="fused"``) never does, so with candidate-free
+behaviors the ``(N, 27M)`` tensor and its ``(N, K, 3)`` gather never reach
+HBM at all.
+
+NeighborContext is deliberately *not* a pytree: it is created and consumed
+within a single trace of the step function and never crosses a
+``jit``/``scan``/``cond`` boundary as data.  The mutable ``_cand`` slot is a
+plain trace-time memo.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .agents import AgentPool
+from .grid import GridIndex, GridSpec, candidate_neighbors_arrays
+
+Array = jax.Array
+
+
+@dataclasses.dataclass
+class NeighborContext:
+    """One iteration's neighbor state (index + lazily built candidates).
+
+    src_* arrays are what candidate ids index into — the pool's own arrays in
+    the single-node engine, the ghost-extended (local + halo) arrays in the
+    distributed engine (§6.2.1).  query_* describe the agents neighbor
+    queries are answered for (always the local pool).
+    """
+
+    spec: GridSpec
+    index: GridIndex
+    src_position: Array          # (S, 3)
+    src_radius: Array            # (S,)
+    src_kind: Array              # (S,)
+    src_alive: Array             # (S,)
+    query_position: Array        # (N, 3) — positions the index was built from
+    query_alive: Array           # (N,)
+    query_ids: Optional[Array] = None   # (N,) ids into the src arrays
+    _cand: Optional[Tuple[Array, Array]] = dataclasses.field(
+        default=None, repr=False
+    )
+
+    @classmethod
+    def for_pool(
+        cls, spec: GridSpec, index: GridIndex, pool: AgentPool
+    ) -> "NeighborContext":
+        """Single-node case: sources == queries == the pool itself."""
+        return cls(
+            spec=spec,
+            index=index,
+            src_position=pool.position,
+            src_radius=pool.radius(),
+            src_kind=pool.kind,
+            src_alive=pool.alive,
+            query_position=pool.position,
+            query_alive=pool.alive,
+        )
+
+    def candidates(self, cache: bool = True) -> Tuple[Array, Array]:
+        """The dense ``(N, 27M)`` candidate ids + mask, built at most once.
+
+        ``cache=False`` is for consumers running inside a ``lax.cond``/
+        ``lax.scan`` sub-trace: the cached value may be reused there, but a
+        *first* build must not be stored (its tracers would escape the
+        sub-trace and leak).  Top-level consumers use the default.
+        """
+        if self._cand is None:
+            cand = candidate_neighbors_arrays(
+                self.spec,
+                self.index,
+                self.query_position,
+                self.query_alive,
+                self.query_ids,
+            )
+            if not cache:
+                return cand
+            self._cand = cand
+        return self._cand
+
+    @property
+    def cand(self) -> Array:
+        return self.candidates()[0]
+
+    @property
+    def cand_mask(self) -> Array:
+        return self.candidates()[1]

@@ -6,7 +6,9 @@ Each kernel package has:
   ref.py    — pure-jnp oracle
 
 Kernels:
-  pairwise_force  — Eq 4.1 contact forces, the §5.6.3 hot spot
+  pairwise_force  — Eq 4.1 contact forces over dense candidates, §5.6.3
+  cell_force      — Eq 4.1 forces fused with the cell-list walk (no dense
+                    candidate tensor; DESIGN.md §4)
   diffusion3d     — Eq 4.3 seven-point stencil
   flash_attention — online-softmax attention for the LM stack (GQA/causal/window)
   rmsnorm         — fused residual-stream normalization (one read, one write)

@@ -1,0 +1,2 @@
+"""cell_force kernel package: fused cell-list contact forces."""
+from . import kernel, ops, ref  # noqa: F401

@@ -1,0 +1,91 @@
+"""jit'd public wrapper for the fused cell-list force kernel.
+
+``cell_list_force`` consumes the grid's ``cell_list`` *directly*: the only
+XLA-side work is the O(n_cells·M) gather into the cell-major planar layout
+and the O(n_cells·M) scatter of per-slot forces back to agent order.  The
+``(N, 27·M)`` candidate tensor, its boolean mask, and the ``(N, K, 3)``
+candidate-position gather of the dense path never exist.
+
+Semantics match the candidate path exactly when no cell overflowed: the pair
+set is "all agents in the 27-box neighborhood, minus self".  Agents dropped
+from an overflowing cell are invisible to the cell list — they exert no
+force *and receive none* here (the dense path still computes one-sided
+forces for them).  `repro.core.forces.mechanical_forces` guards this with a
+``lax.cond`` fallback on ``index.overflowed`` (correctness first, like the
+§5.5 compaction fallback).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import kernel as _kernel
+from .ref import cell_list_force_ref
+
+Array = jax.Array
+
+
+def _cell_major_planar(
+    position: Array, radius: Array, cell_list: Array, dims: tuple
+):
+    """Gather pool arrays into padded cell-major planar layout.
+
+    Returns ``(cpos, crad, cval)`` shaped ``(·, n_cols + 2·pad, nz, M)`` with
+    ``pad = ny + 1`` ghost columns per side (empty: cval = 0).
+    """
+    nx, ny, nz = dims
+    n_cells, m = cell_list.shape
+    c = position.shape[0]
+    valid = cell_list < c                                  # sentinel C = empty
+    safe = jnp.where(valid, cell_list, 0)
+    cpos = jnp.take(position, safe, axis=0)                # (n_cells, M, 3)
+    crad = jnp.where(valid, jnp.take(radius, safe, axis=0), 0.0)
+
+    n_cols = nx * ny
+    pad = ny + 1
+    padw = [(0, 0), (pad, pad), (0, 0), (0, 0)]
+    cpos = jnp.pad(
+        jnp.moveaxis(cpos, -1, 0).reshape(3, n_cols, nz, m), padw
+    )
+    crad = jnp.pad(crad.reshape(1, n_cols, nz, m), padw)
+    cval = jnp.pad(valid.astype(jnp.int8).reshape(1, n_cols, nz, m), padw)
+    return cpos, crad, cval
+
+
+@functools.partial(
+    jax.jit, static_argnames=("dims", "k", "gamma", "impl", "interpret")
+)
+def cell_list_force(
+    position: Array,    # (C, 3) f32
+    radius: Array,      # (C,) f32
+    cell_list: Array,   # (n_cells, M) int32, empty slots = C
+    dims: tuple,        # (nx, ny, nz) static — n_cells must equal nx·ny·nz
+    k: float = 2.0,
+    gamma: float = 1.0,
+    impl: str = "pallas",
+    interpret: bool = True,
+) -> Array:
+    """Net Eq-4.1 force per agent, (C, 3), straight from the cell list."""
+    nx, ny, nz = dims
+    n_cells, m = cell_list.shape
+    assert n_cells == nx * ny * nz, (cell_list.shape, dims)
+    c = position.shape[0]
+
+    if impl == "reference":
+        return cell_list_force_ref(
+            position, radius, cell_list, dims, k=k, gamma=gamma
+        )
+
+    cpos, crad, cval = _cell_major_planar(position, radius, cell_list, dims)
+    slot_force = _kernel.cell_list_force_planar(
+        cpos, crad, cval, dims, k=k, gamma=gamma, interpret=interpret
+    )                                                       # (3, n_cols, nz, M)
+
+    # Scatter per-slot forces back to agent order.  Empty slots carry exactly
+    # zero (masked in-kernel) and their sentinel index C lands in a trash row.
+    slot_force = slot_force.reshape(3, n_cells * m).T       # (n_cells·M, 3)
+    slots = cell_list.reshape(-1)
+    return jnp.zeros((c + 1, 3), jnp.float32).at[slots].add(slot_force)[:c]

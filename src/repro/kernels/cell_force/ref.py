@@ -1,0 +1,88 @@
+"""Pure-jnp oracle for the fused cell-list force kernel.
+
+Slot-centric like the kernel — queries are the agents *listed* in the cell
+list — but computed the obvious way: materialize each cell's 27-box
+candidate slots and sum Eq-4.1 pair forces.  Deliberately independent of the
+kernel's column decomposition, linear-shift trick, and dz handling, so it
+exercises them all.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+_OFFSETS = [
+    (dx, dy, dz) for dx in (-1, 0, 1) for dy in (-1, 0, 1) for dz in (-1, 0, 1)
+]
+
+
+def cell_list_force_ref(
+    position: Array,   # (C, 3) f32
+    radius: Array,     # (C,) f32
+    cell_list: Array,  # (n_cells, M) int32, empty slots = C
+    dims: tuple,       # (nx, ny, nz)
+    k: float = 2.0,
+    gamma: float = 1.0,
+) -> Array:
+    nx, ny, nz = dims
+    n_cells, m = cell_list.shape
+    c = position.shape[0]
+
+    # (x, y, z) of every cell, from the row-major linear id.
+    ids = jnp.arange(n_cells, dtype=jnp.int32)
+    cz = ids % nz
+    cy = (ids // nz) % ny
+    cx = ids // (nz * ny)
+
+    # 27-box candidate slots per cell: (n_cells, 27, M) agent ids.
+    offs = jnp.asarray(_OFFSETS, jnp.int32)                    # (27, 3)
+    nbx = cx[:, None] + offs[None, :, 0]
+    nby = cy[:, None] + offs[None, :, 1]
+    nbz = cz[:, None] + offs[None, :, 2]
+    in_range = (
+        (nbx >= 0) & (nbx < nx) & (nby >= 0) & (nby < ny)
+        & (nbz >= 0) & (nbz < nz)
+    )                                                          # (n_cells, 27)
+    nb_cid = jnp.clip((nbx * ny + nby) * nz + nbz, 0, n_cells - 1)
+    cand = cell_list[nb_cid]                                   # (n_cells, 27, M)
+    cand_valid = in_range[:, :, None] & (cand < c)
+    cand = cand.reshape(n_cells, 27 * m)
+    cand_valid = cand_valid.reshape(n_cells, 27 * m)
+
+    # Per-slot queries: each listed agent vs its cell's candidates, minus self.
+    q_ids = cell_list                                          # (n_cells, M)
+    q_valid = q_ids < c
+    q_safe = jnp.where(q_valid, q_ids, 0)
+    q_pos = jnp.take(position, q_safe, axis=0)                 # (n_cells, M, 3)
+    q_rad = jnp.take(radius, q_safe, axis=0)
+
+    c_safe = jnp.where(cand_valid, cand, 0)
+    c_pos = jnp.take(position, c_safe, axis=0)                 # (n_cells, 27M, 3)
+    c_rad = jnp.take(radius, c_safe, axis=0)
+
+    pair_ok = (
+        q_valid[:, :, None]
+        & cand_valid[:, None, :]
+        & (q_ids[:, :, None] != cand[:, None, :])              # exclude self
+    )                                                          # (n_cells, M, 27M)
+    dx = q_pos[:, :, None, :] - c_pos[:, None, :, :]
+    dist = jnp.sqrt(jnp.sum(dx * dx, axis=-1) + 1e-20)
+    delta = q_rad[:, :, None] + c_rad[:, None, :] - dist
+    overlap = (delta > 0.0) & pair_ok
+    rbar = (
+        q_rad[:, :, None] * c_rad[:, None, :]
+        / jnp.maximum(q_rad[:, :, None] + c_rad[:, None, :], 1e-20)
+    )
+    mag = k * delta - gamma * jnp.sqrt(jnp.maximum(rbar * delta, 0.0))
+    scale = jnp.where(overlap, mag / dist, 0.0)
+    slot_force = jnp.sum(scale[..., None] * dx, axis=2)        # (n_cells, M, 3)
+
+    slots = cell_list.reshape(-1)
+    return (
+        jnp.zeros((c + 1, 3), jnp.float32)
+        .at[slots]
+        .add(slot_force.reshape(-1, 3))[:c]
+    )

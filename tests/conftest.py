@@ -4,15 +4,75 @@ NOTE: deliberately does NOT set --xla_force_host_platform_device_count —
 unit/smoke tests must see the real single CPU device.  Multi-device tests
 (tests/test_distributed.py, tests/test_dryrun_small.py) spawn subprocesses
 with their own XLA_FLAGS.
+
+hypothesis is optional: when it is not installed, a stub module is placed in
+``sys.modules`` before test collection so the five property-test modules
+still import.  ``@given``-decorated tests then self-skip at run time;
+every plain test in those modules keeps running.
 """
 
 import os
 import sys
+import types
 
 import numpy as np
 import pytest
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def _install_hypothesis_stub():
+    """Importable fake `hypothesis` whose @given tests skip instead of error."""
+
+    def given(*_args, **_kwargs):
+        def deco(fn):
+            def skipped(*_a, **_k):
+                pytest.skip("hypothesis not installed")
+
+            skipped.__name__ = fn.__name__
+            skipped.__doc__ = fn.__doc__
+            return skipped
+
+        return deco
+
+    def settings(*_args, **_kwargs):
+        return lambda fn: fn
+
+    def assume(*_args, **_kwargs):
+        return True
+
+    class _Strategy:
+        """Accepts any strategy construction/combination, returns itself."""
+
+        def __call__(self, *a, **k):
+            return self
+
+        def __getattr__(self, _name):
+            return self
+
+        def map(self, _fn):
+            return self
+
+        def filter(self, _fn):
+            return self
+
+    strategies = types.ModuleType("hypothesis.strategies")
+    strategies.__getattr__ = lambda _name: _Strategy()
+
+    hyp = types.ModuleType("hypothesis")
+    hyp.given = given
+    hyp.settings = settings
+    hyp.assume = assume
+    hyp.strategies = strategies
+    hyp.__is_repro_stub__ = True
+    sys.modules["hypothesis"] = hyp
+    sys.modules["hypothesis.strategies"] = strategies
+
+
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    _install_hypothesis_stub()
 
 
 @pytest.fixture

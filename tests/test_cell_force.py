@@ -1,0 +1,140 @@
+"""Fused cell-list force path: kernel parity + engine dataflow regressions.
+
+No hypothesis dependency — these must run everywhere."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    EngineConfig,
+    ForceParams,
+    build_index,
+    init_state,
+    make_pool,
+    mechanical_forces,
+    run_jit,
+    simulation_step,
+    spec_for_space,
+)
+from repro.core.forces import update_static_flags, update_static_flags_celllist
+from repro.core.grid import candidate_neighbors
+from repro.kernels.cell_force import ops as cf_ops
+
+
+def _random_pool(rng, n, cap, space, diameter=(1.0, 6.0), dead_frac=0.2):
+    pos = rng.uniform(0, space, (n, 3)).astype(np.float32)
+    diam = rng.uniform(*diameter, (n,)).astype(np.float32)
+    pool = make_pool(cap, jnp.asarray(pos), diameter=jnp.asarray(diam))
+    if dead_frac > 0:
+        kill_ids = rng.choice(n, max(int(n * dead_frac), 1), replace=False)
+        kill = jnp.zeros((cap,), bool).at[jnp.asarray(kill_ids)].set(True)
+        pool = pool.replace(alive=pool.alive & ~kill)
+    return pool
+
+
+# ------------------------------------------------------------ kernel parity
+
+@pytest.mark.parametrize(
+    "n,cap,space,radius,m",
+    [
+        (60, 80, 30.0, 3.0, 16),     # generic
+        (200, 256, 40.0, 5.0, 32),   # denser, bigger cells
+        (30, 64, 12.0, 6.0, 32),     # tiny grid (2x2x2): every cell on boundary
+        (5, 8, 10.0, 5.0, 4),        # near-empty
+    ],
+)
+def test_kernel_matches_oracle(n, cap, space, radius, m):
+    rng = np.random.default_rng(n + m)
+    pool = _random_pool(rng, n, cap, space)
+    spec = spec_for_space(0.0, space, radius, max_per_cell=m)
+    index = build_index(spec, pool)
+    assert not bool(index.overflowed)
+    args = (pool.position, pool.radius(), index.cell_list, spec.dims)
+    ref = cf_ops.cell_list_force(*args, impl="reference")
+    pal = cf_ops.cell_list_force(*args, impl="pallas")
+    np.testing.assert_allclose(np.asarray(pal), np.asarray(ref), atol=1e-5)
+
+
+def test_fused_matches_reference_forces():
+    """force_impl='fused' vs the dense candidate path, incl. dead agents and
+    agents in boundary cells (agents sit right at the domain faces)."""
+    rng = np.random.default_rng(7)
+    pool = _random_pool(rng, 150, 200, 40.0)
+    # pin some agents onto the boundary faces
+    pinned = pool.position.at[:10, 0].set(0.0).at[10:20, 1].set(39.999)
+    pool = pool.replace(position=pinned)
+    spec = spec_for_space(0.0, 40.0, 5.0, max_per_cell=32)
+    index = build_index(spec, pool)
+    ref = mechanical_forces(spec, index, pool, ForceParams(), impl="reference")
+    fused = mechanical_forces(spec, index, pool, ForceParams(), impl="fused")
+    assert float(jnp.max(jnp.abs(fused - ref))) < 1e-5
+
+
+def test_fused_overflow_falls_back_to_reference():
+    """An overflowing cell would truncate pair forces; the lax.cond fallback
+    must reproduce the dense path exactly."""
+    rng = np.random.default_rng(1)
+    pos = np.concatenate(
+        [rng.uniform(1.0, 2.0, (10, 3)), rng.uniform(0, 30.0, (40, 3))]
+    ).astype(np.float32)
+    pool = make_pool(64, jnp.asarray(pos), diameter=3.0)
+    spec = spec_for_space(0.0, 30.0, 3.0, max_per_cell=4)
+    index = build_index(spec, pool)
+    assert bool(index.overflowed)
+    ref = mechanical_forces(spec, index, pool, ForceParams(), impl="reference")
+    fused = mechanical_forces(
+        spec, index, pool, ForceParams(), impl="fused", fused_fallback=True
+    )
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(ref), atol=1e-6)
+
+
+def test_fused_custom_params():
+    rng = np.random.default_rng(5)
+    pool = _random_pool(rng, 80, 96, 25.0, dead_frac=0.0)
+    spec = spec_for_space(0.0, 25.0, 5.0, max_per_cell=32)
+    index = build_index(spec, pool)
+    params = ForceParams(repulsion_k=5.0, attraction_gamma=0.3)
+    ref = mechanical_forces(spec, index, pool, params, impl="reference")
+    fused = mechanical_forces(spec, index, pool, params, impl="fused")
+    assert float(jnp.max(jnp.abs(fused - ref))) < 1e-5
+
+
+# ------------------------------------------------------- engine-level parity
+
+def _engine_config(spec, space, impl, **kw):
+    return EngineConfig(
+        spec=spec,
+        force_params=ForceParams(),
+        dt=0.1,
+        min_bound=0.0,
+        max_bound=space,
+        boundary="closed",
+        force_impl=impl,
+        **kw,
+    )
+
+
+def test_engine_trajectories_match():
+    rng = np.random.default_rng(11)
+    pool = _random_pool(rng, 120, 160, 40.0)
+    spec = spec_for_space(0.0, 40.0, 5.0, max_per_cell=32)
+    state = init_state(pool, seed=2)
+    ref, _ = run_jit(_engine_config(spec, 40.0, "reference"), state, 8)
+    fused, _ = run_jit(_engine_config(spec, 40.0, "fused"), state, 8)
+    np.testing.assert_allclose(
+        np.asarray(fused.pool.position), np.asarray(ref.pool.position), atol=1e-4
+    )
+    assert bool(jnp.all(ref.pool.static == fused.pool.static))
+
+
+def test_celllist_static_flags_match_candidate_flags():
+    rng = np.random.default_rng(13)
+    pool = _random_pool(rng, 100, 128, 30.0)
+    spec = spec_for_space(0.0, 30.0, 5.0, max_per_cell=32)
+    index = build_index(spec, pool)
+    disp = jnp.asarray(rng.normal(0, 1e-3, (128, 3)), jnp.float32)
+    cand, mask = candidate_neighbors(spec, index, pool)
+    ref = update_static_flags(pool, disp, cand, mask, ForceParams())
+    cl = update_static_flags_celllist(spec, index, pool, disp, ForceParams())
+    np.testing.assert_array_equal(np.asarray(ref.static), np.asarray(cl.static))

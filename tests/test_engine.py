@@ -1,5 +1,7 @@
 """Engine integration tests: Algorithm 8 semantics + use-case physics."""
 
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -127,3 +129,67 @@ def test_force_relaxation_separates_overlap():
     p = np.asarray(final.pool.position)
     gap = np.linalg.norm(p[0] - p[1])
     assert gap > 0.8  # pushed apart toward the ~equilibrium separation
+
+
+# --------------------------------------------------- neighbor-dataflow audit
+
+def _counting_candidates(monkeypatch):
+    """Count candidate_neighbors_arrays invocations during one step trace."""
+    import repro.core.neighbors as nb
+
+    calls = {"n": 0}
+    real = nb.candidate_neighbors_arrays
+
+    def counted(*args, **kwargs):
+        calls["n"] += 1
+        return real(*args, **kwargs)
+
+    monkeypatch.setattr(nb, "candidate_neighbors_arrays", counted)
+    return calls
+
+
+def test_step_builds_candidates_exactly_once(monkeypatch):
+    """Regression: the seed built the dense (N, 27M) candidate tensor twice
+    per step (simulation_step + mechanical_forces).  With candidate-hungry
+    behaviors AND forces AND static detection in one step, it must now be
+    built exactly once."""
+    calls = _counting_candidates(monkeypatch)
+    config, state = _sir_setup()
+    config = dataclasses.replace(config, force_params=ForceParams())
+    simulation_step(config, state)  # unjitted: counts python-level invocations
+    assert calls["n"] == 1
+
+
+def test_fused_step_builds_no_candidates(monkeypatch):
+    """force_impl='fused' without candidate-reading behaviors or the overflow
+    fallback never materializes the dense candidate tensor at all."""
+    calls = _counting_candidates(monkeypatch)
+    pool = make_pool(32, jnp.asarray(np.random.default_rng(0).uniform(0, 30, (20, 3)), jnp.float32), diameter=2.0)
+    config = EngineConfig(
+        spec=spec_for_space(0.0, 30.0, 5.0, max_per_cell=16),
+        force_params=ForceParams(),
+        dt=0.1,
+        min_bound=0.0,
+        max_bound=30.0,
+        force_impl="fused",
+        fused_overflow_fallback=False,
+    )
+    simulation_step(config, init_state(pool, seed=0))
+    assert calls["n"] == 0
+
+
+def test_fused_fallback_builds_candidates_once(monkeypatch):
+    """With the overflow fallback enabled the dense tensor appears only in
+    the lax.cond fallback branch — traced once, not duplicated."""
+    calls = _counting_candidates(monkeypatch)
+    pool = make_pool(32, jnp.asarray(np.random.default_rng(0).uniform(0, 30, (20, 3)), jnp.float32), diameter=2.0)
+    config = EngineConfig(
+        spec=spec_for_space(0.0, 30.0, 5.0, max_per_cell=16),
+        force_params=ForceParams(),
+        dt=0.1,
+        min_bound=0.0,
+        max_bound=30.0,
+        force_impl="fused",
+    )
+    simulation_step(config, init_state(pool, seed=0))
+    assert calls["n"] == 1
