@@ -17,7 +17,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .common import print_table, save_result, timeit
+from .common import print_table, save_result, smoke, timeit
 
 from repro.core import (
     EngineConfig, ForceParams, init_state, make_pool, run_jit,
@@ -49,6 +49,8 @@ def _setup(n, space, use_morton, sort_freq, active_capacity):
 
 def run(fast: bool = True):
     n = 4000 if fast else 20000
+    if smoke():
+        n = 1000
     space = 60.0
     variants = [
         ("baseline (linear order, no sort)", dict(use_morton=False, sort_freq=0, active_capacity=None)),

@@ -8,7 +8,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .common import print_table, save_result, timeit
+from .common import print_table, save_result, smoke, timeit
 
 from repro.core import (
     EngineConfig, ForceParams, brownian_motion, init_state, make_pool,
@@ -19,6 +19,8 @@ import functools
 
 def run(fast: bool = True):
     sizes = [1000, 4000, 16000] if fast else [1000, 4000, 16000, 64000]
+    if smoke():
+        sizes = [512, 2048]
     rows = []
     per_agent = []
     for n in sizes:

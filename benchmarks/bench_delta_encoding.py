@@ -9,13 +9,13 @@ aura stream with realistic occupancy churn."""
 import jax.numpy as jnp
 import numpy as np
 
-from .common import print_table, save_result
+from .common import print_table, save_result, smoke
 
 from repro.core import delta as dc
 
 
 def run(fast: bool = True):
-    h, steps = 256, 40
+    h, steps = (64, 8) if smoke() else (256, 40)
     rng = np.random.default_rng(5)
     # simulated aura stream: positions drift slowly; 5% slot churn per step
     pos = rng.uniform(0, 20, (h, 3)).astype(np.float32)

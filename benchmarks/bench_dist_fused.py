@@ -1,0 +1,161 @@
+"""Distributed fused force pass vs the dense candidate path (DESIGN.md §4).
+
+Companion to ``bench_fused_force.py`` for the *distributed* engine (§6.2):
+the per-device ``distributed_step`` is lowered at a fixed mesh for each force
+impl and accounted with ``cost_analysis()`` "bytes accessed" — the HBM-traffic
+proxy that is the tracked metric in this container (interpret-mode wall time
+is not representative, see bench_fused_force).  Variants:
+
+  dense:          force_impl="reference" — builds the (C, 27M) candidate
+                  tensor over the ghost-extended arrays and gathers (C, K, 3)
+                  candidate positions (the pre-adoption dataflow)
+  fused:          force_impl="fused", overflow fallback disabled — the
+                  Pallas cell-list kernel walks the halo-extended grid
+                  directly; the lazy NeighborContext means the candidate
+                  tensor is never materialized (cost_analysis bills both
+                  lax.cond branches, so the fallback variant is reported
+                  separately)
+  fused_fallback: force_impl="fused" with the lax.cond dense fallback kept
+                  (the production-default safety net)
+
+Also reported: the number of sort ops in the migrate/halo packing subgraph —
+must be ZERO now that channel selection and free-slot insertion are
+cumsum-rank compaction scatters (the sort-free packing half of ISSUE 2).
+
+Acceptance (ISSUE 2): step bytes dense/fused ≥ 3 at N=8192/device, M=16,
+and packing_sorts == 0.
+
+Each probe runs in a subprocess with 4 fake host devices (the main process
+must keep the real single-device view, like tests/test_distributed.py).
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+from .common import print_table, save_result
+
+# Smoke sizing comes from scripts/bench.sh's BENCH_N export (single source
+# of truth); BENCH_SMOKE itself only reroutes save_result (common.smoke).
+N_PER_DEV = int(os.environ.get("BENCH_N", 8192))
+MAX_PER_CELL = int(os.environ.get("BENCH_M", 16))
+
+_PROBE = r"""
+import os, sys, json
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+sys.path.insert(0, %(src)r)
+import numpy as np
+from repro.core import EngineConfig, ForceParams
+from repro.core.distributed import (
+    DomainConfig, hlo_sort_count, init_dist_state, make_distributed_step,
+    make_packing_program,
+)
+from repro.launch.mesh import make_mesh
+
+n_per_dev = %(n)d
+m = %(m)d
+space = 100.0
+radius = 6.25  # -> 16 local cells/dim: ~2 agents/cell mean at N=8192/device
+mesh = make_mesh((2, 2), ("data", "model"))
+dcfg = DomainConfig(
+    mesh_axes=("data", "model"), axis_sizes=(2, 2), extent=space,
+    halo_width=radius, halo_capacity=max(n_per_dev // 4, 64),
+    migrate_capacity=max(n_per_dev // 8, 64), depth=space, halo_codec="int16",
+)
+spec = dcfg.grid_spec(box_size=radius, max_per_cell=m)
+ecfg = EngineConfig(
+    spec=spec, behaviors=(), force_params=ForceParams(), dt=0.05,
+    min_bound=0.0, max_bound=space, boundary="open", sort_frequency=8,
+    force_impl=%(impl)r, fused_overflow_fallback=%(fallback)s,
+)
+rng = np.random.default_rng(0)
+n = n_per_dev * 4
+pos = rng.uniform(0.0, [2 * space, 2 * space, space], (n, 3)).astype(np.float32)
+state = init_dist_state(
+    dcfg, capacity=int(n_per_dev * 3 // 2), positions=pos, diameter=4.0
+)
+step = make_distributed_step(mesh, dcfg, ecfg)
+lowered = step.lower(state)   # lowered once: compiled for costs, text for sorts
+compiled = lowered.compile()
+from repro.launch.dryrun import cost_analysis_dict
+ca = cost_analysis_dict(compiled)
+out = {
+    "bytes_accessed": float(ca["bytes accessed"]),
+    "flops": float(ca.get("flops", 0.0)),
+}
+
+
+packing_hlo = make_packing_program(mesh, dcfg).lower(state).as_text()
+out["packing_sorts"] = hlo_sort_count(packing_hlo)
+out["step_sorts"] = hlo_sort_count(lowered.as_text())
+print(json.dumps(out))
+"""
+
+
+def _probe(src: str, n: int, m: int, impl: str, fallback: bool) -> dict:
+    code = _PROBE % {
+        "src": os.path.abspath(src), "n": n, "m": m,
+        "impl": impl, "fallback": fallback,
+    }
+    proc = subprocess.run(
+        [sys.executable, "-c", code], capture_output=True, text=True, timeout=900
+    )
+    if proc.returncode != 0:
+        print(proc.stderr[-2000:])
+        raise RuntimeError(f"dist_fused probe impl={impl} failed")
+    return json.loads(proc.stdout.strip().splitlines()[-1])
+
+
+def run(fast: bool = True):
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    n = N_PER_DEV
+    m = MAX_PER_CELL
+    variants = {
+        "dense": ("reference", True),
+        "fused": ("fused", False),
+        "fused_fallback": ("fused", True),
+    }
+    out = {
+        "config": {
+            "n_per_device": n, "devices": 4, "max_per_cell": m,
+            "candidates_k": 27 * m, "mesh": "2x2", "halo_codec": "int16",
+        },
+        "step": {},
+        "note": (
+            "bytes_accessed of the lowered per-device SPMD step "
+            "(cost_analysis); interpret-mode wall time is not representative "
+            "on this CPU container, bytes is the tracked metric.  "
+            "fused_fallback bills BOTH lax.cond branches, so 'fused' (bound "
+            "guaranteed by construction) is the acceptance variant."
+        ),
+    }
+    rows = []
+    for name, (impl, fb) in variants.items():
+        rec = _probe(src, n, m, impl, fb)
+        out["step"][name] = rec
+        rows.append(
+            (f"step/{name}", f"{rec['bytes_accessed']/1e6:.1f}",
+             rec["packing_sorts"], rec["step_sorts"])
+        )
+
+    ratio = (
+        out["step"]["dense"]["bytes_accessed"]
+        / out["step"]["fused"]["bytes_accessed"]
+    )
+    out["ratios"] = {"step_bytes_dense_over_fused": ratio}
+    out["packing_sorts"] = out["step"]["dense"]["packing_sorts"]
+
+    print_table(
+        f"distributed fused force (N={n}/device, M={m}, mesh 2x2)",
+        rows, ["variant", "MB accessed/step", "packing sorts", "step sorts"],
+    )
+    print(f"step_bytes_dense_over_fused: {ratio:.2f}x")
+    assert out["packing_sorts"] == 0, "packing must be sort-free"
+    path = save_result("dist_fused_force", out)
+    print("saved:", path)
+    return out
+
+
+if __name__ == "__main__":
+    run(fast="--full" not in sys.argv)

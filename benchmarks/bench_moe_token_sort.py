@@ -12,7 +12,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .common import print_table, save_result, timeit
+from .common import print_table, save_result, smoke, timeit
 
 from repro.models import moe as moe_mod
 from repro.models.params import unzip
@@ -21,6 +21,8 @@ from repro.models.params import unzip
 def run(fast: bool = True):
     d, f, e, k = 256, 512, 64, 8
     t = 2048 if fast else 8192
+    if smoke():
+        t = 512
     b = 4
     key = jax.random.PRNGKey(0)
     params_tree = moe_mod.moe_init(key, d, f, e)

@@ -12,7 +12,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .common import print_table, save_result, timeit
+from .common import print_table, save_result, smoke, timeit
 
 from repro.core import ForceParams, make_pool, spec_for_space
 from repro.core.forces import forces_from_candidates, pair_force
@@ -35,6 +35,8 @@ def _brute_forces(pool, params):
 
 def run(fast: bool = True):
     sizes = [512, 2048, 8192] if fast else [512, 2048, 8192, 32768]
+    if smoke():
+        sizes = [512]
     params = ForceParams()
     rows = []
     out = {}

@@ -14,7 +14,7 @@ import subprocess
 import sys
 import tempfile
 
-from .common import print_table, save_result
+from .common import print_table, save_result, smoke
 
 _PROBE = r"""
 import os, sys, json
@@ -24,11 +24,11 @@ import jax, jax.numpy as jnp
 import numpy as np
 from repro.core import EngineConfig, ForceParams, brownian_motion
 from repro.core.distributed import DomainConfig, init_dist_state, make_distributed_step
-from repro.launch.dryrun import collective_bytes_from_hlo, _strip_done_ops
+from repro.launch.dryrun import collective_bytes_from_hlo, cost_analysis_dict, _strip_done_ops
 
 mx, my = %(mx)d, %(my)d
-mesh = jax.make_mesh((mx, my), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro.launch.mesh import make_mesh
+mesh = make_mesh((mx, my), ("data", "model"))
 dcfg = DomainConfig(mesh_axes=("data", "model"), axis_sizes=(mx, my),
                     extent=16.0, halo_width=2.0, halo_capacity=128,
                     migrate_capacity=64, depth=16.0, halo_codec="int16")
@@ -45,14 +45,16 @@ step = make_distributed_step(mesh, dcfg, ecfg)
 lowered = step.lower(state)
 compiled = lowered.compile()
 coll = collective_bytes_from_hlo(_strip_done_ops(compiled.as_text()))
-print(json.dumps({"ndev": mx*my, "coll": coll,
-                  "flops": compiled.cost_analysis().get("flops", 0.0)}))
+ca = cost_analysis_dict(compiled)
+print(json.dumps({"ndev": mx*my, "coll": coll, "flops": ca.get("flops", 0.0)}))
 """
 
 
 def run(fast: bool = True):
     src = os.path.join(os.path.dirname(__file__), "..", "src")
     meshes = [(2, 2), (4, 2), (4, 4)] if fast else [(2, 2), (4, 2), (4, 4), (8, 4)]
+    if smoke():
+        meshes = [(2, 2), (4, 2)]
     rows, out = [], {}
     for mx, my in meshes:
         code = _PROBE % {"ndev": mx * my, "mx": mx, "my": my, "src": os.path.abspath(src)}

@@ -13,7 +13,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .common import print_table, save_result
+from .common import print_table, save_result, smoke
 
 from repro.core import (
     EngineConfig, ForceParams, brownian_motion, init_state, make_pool,
@@ -23,6 +23,8 @@ from repro.core import (
 
 def run(fast: bool = True):
     n = 6000 if fast else 30000
+    if smoke():
+        n = 1000
     space = float(np.cbrt(n) * 3.2)
     rng = np.random.default_rng(8)
     pos = rng.uniform(0, space, (n, 3)).astype(np.float32)

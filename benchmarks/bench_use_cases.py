@@ -10,7 +10,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .common import print_table, save_result
+from .common import print_table, save_result, smoke
 
 from repro.core import (
     INFECTED, SUSCEPTIBLE,
@@ -39,6 +39,8 @@ def run(fast: bool = True):
 
     # oncology: growth + division from a seed cluster
     n0, cap = (40, 2048) if fast else (200, 16384)
+    if smoke():
+        n0, cap = 20, 256
     pos = (100 + rng.normal(0, 10, (n0, 3))).astype(np.float32)
     cfg = EngineConfig(
         spec=spec_for_space(0.0, 200.0, 18.0, max_per_cell=96),
@@ -48,12 +50,14 @@ def run(fast: bool = True):
         force_params=ForceParams(), dt=1.0, min_bound=0.0, max_bound=200.0,
         boundary="closed",
     )
-    row, wall = _run("oncology (spheroid)", cfg, init_state(make_pool(cap, jnp.asarray(pos), diameter=14.0), seed=1), 100 if fast else 288)
+    row, wall = _run("oncology (spheroid)", cfg, init_state(make_pool(cap, jnp.asarray(pos), diameter=14.0), seed=1), 8 if smoke() else (100 if fast else 288))
     rows.append(row); out["oncology"] = wall
 
     # epidemiology: SIR
     n = 2000 if fast else 20000
     space = 100.0 if fast else 215.0
+    if smoke():
+        n, space = 500, 60.0
     pos = rng.uniform(0, space, (n, 3)).astype(np.float32)
     kind = np.where(np.arange(n) < n // 100, INFECTED, SUSCEPTIBLE)
     cfg = EngineConfig(
@@ -61,11 +65,13 @@ def run(fast: bool = True):
         behaviors=(random_movement(4.0), sir_infection(3.24, 0.285), sir_recovery(0.0052)),
         dt=1.0, min_bound=0.0, max_bound=space, boundary="toroidal",
     )
-    row, wall = _run("epidemiology (SIR)", cfg, init_state(make_pool(n, jnp.asarray(pos), diameter=0.5, kind=jnp.asarray(kind)), seed=2), 200 if fast else 1000)
+    row, wall = _run("epidemiology (SIR)", cfg, init_state(make_pool(n, jnp.asarray(pos), diameter=0.5, kind=jnp.asarray(kind)), seed=2), 8 if smoke() else (200 if fast else 1000))
     rows.append(row); out["epidemiology"] = wall
 
     # neuroscience-style: heavy contact mechanics at high density
     n = 3000 if fast else 30000
+    if smoke():
+        n = 500
     space = float(np.cbrt(n) * 2.5)
     pos = rng.uniform(0, space, (n, 3)).astype(np.float32)
     cfg = EngineConfig(
@@ -74,7 +80,7 @@ def run(fast: bool = True):
         force_params=ForceParams(), dt=0.1, min_bound=0.0, max_bound=space,
         boundary="closed", active_capacity=n,
     )
-    row, wall = _run("mechanics (dense contact)", cfg, init_state(make_pool(n, jnp.asarray(pos), diameter=1.8), seed=3), 100)
+    row, wall = _run("mechanics (dense contact)", cfg, init_state(make_pool(n, jnp.asarray(pos), diameter=1.8), seed=3), 8 if smoke() else 100)
     rows.append(row); out["mechanics"] = wall
 
     print_table("Table 4.5: use-case performance", rows,

@@ -13,6 +13,28 @@ import numpy as np
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results", "bench")
 
 
+def smoke() -> bool:
+    """Smoke tier (scripts/bench.sh): shrink problem sizes / iteration counts
+    so every benchmark target executes end-to-end in minutes.  Results are
+    NOT representative — the tier exists so benchmark bit-rot fails fast."""
+    return os.environ.get("BENCH_SMOKE") == "1"
+
+
+def save_result(name: str, payload: dict):
+    """Persist a benchmark payload.  Smoke runs are tagged and diverted to
+    results/bench/smoke/ so they can never clobber a tracked result."""
+    out_dir = RESULTS_DIR
+    if smoke():
+        out_dir = os.path.join(RESULTS_DIR, "smoke")
+        payload = dict(payload)
+        payload["smoke"] = True
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"{name}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+    return path
+
+
 def timeit(fn, *args, warmup=1, iters=3):
     """Median wall time of fn(*args) with block_until_ready."""
     for _ in range(warmup):
@@ -23,14 +45,6 @@ def timeit(fn, *args, warmup=1, iters=3):
         jax.block_until_ready(fn(*args))
         times.append(time.perf_counter() - t0)
     return float(np.median(times))
-
-
-def save_result(name: str, payload: dict):
-    os.makedirs(RESULTS_DIR, exist_ok=True)
-    path = os.path.join(RESULTS_DIR, f"{name}.json")
-    with open(path, "w") as f:
-        json.dump(payload, f, indent=1)
-    return path
 
 
 def print_table(title: str, rows, headers):

@@ -14,6 +14,10 @@
 | bench_sort_frequency  | Fig 5.14 sorting frequency sweep                |
 | bench_moe_token_sort  | beyond-paper: §5.4.2 sorting → MoE dispatch     |
 | bench_fused_force     | DESIGN.md §4 fused cell-list force HBM bytes    |
+| bench_dist_fused      | §6.2 distributed fused force + sort-free packing|
+
+Smoke tier: `scripts/bench.sh` (BENCH_SMOKE=1) shrinks problem sizes so every
+target executes end-to-end in minutes — benchmark bit-rot fails fast in CI.
 
 Roofline numbers come from `python -m repro.launch.dryrun --all` (separate
 entry point: it needs 512 fake devices).
@@ -28,6 +32,7 @@ from . import (
     bench_ablation,
     bench_complexity,
     bench_delta_encoding,
+    bench_dist_fused,
     bench_fused_force,
     bench_halo_packing,
     bench_moe_token_sort,
@@ -48,6 +53,7 @@ ALL = {
     "scaling": bench_scaling,
     "moe_token_sort": bench_moe_token_sort,
     "fused_force": bench_fused_force,
+    "dist_fused": bench_dist_fused,
 }
 
 

@@ -1,0 +1,22 @@
+#!/usr/bin/env bash
+# Benchmark smoke tier (see ROADMAP.md / benchmarks/run.py).
+#
+# Runs every `benchmarks/run.py` target end-to-end at smoke sizes
+# (BENCH_SMOKE=1: each module shrinks agent counts / step horizons / mesh
+# sweeps; kernels stay in interpret mode) so benchmark bit-rot fails fast —
+# an import error, a stale API use, or a broken probe surfaces in minutes
+# instead of rotting until the next real measurement run.
+#
+# Smoke results are tagged `"smoke": true` and written to
+# results/bench/smoke/ — they never clobber the tracked numbers in
+# results/bench/.  Extra args are forwarded to `benchmarks.run`
+# (e.g. `scripts/bench.sh --only dist_fused`).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+export BENCH_SMOKE=1
+export BENCH_N="${BENCH_N:-1024}"
+export BENCH_M="${BENCH_M:-16}"
+
+exec python -m benchmarks.run "$@"

@@ -6,6 +6,9 @@
 # process.  tests/conftest.py notes the unit tests must also pass on the
 # real single device — CI should run both; this script is the multi-device
 # flavor.  Extra args are forwarded to pytest.
+#
+# Companion: scripts/bench.sh is the benchmark smoke tier — every
+# benchmarks/run.py target at shrunk sizes, so benchmark bit-rot fails fast.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 

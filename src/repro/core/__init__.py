@@ -13,7 +13,15 @@ Layer map (DESIGN.md §3):
   distributed  TeraAgent: domain decomposition + halo exchange (§6.2)
 """
 
-from .agents import AgentPool, add_agents, compact, make_pool, permute, remove_agents
+from .agents import (
+    AgentPool,
+    add_agents,
+    compact,
+    compact_indices,
+    make_pool,
+    permute,
+    remove_agents,
+)
 from .behaviors import (
     INFECTED,
     RECOVERED,
@@ -58,7 +66,8 @@ from .grid import GridIndex, GridSpec, build_index, candidate_neighbors, sort_ag
 from .neighbors import NeighborContext
 
 __all__ = [
-    "AgentPool", "add_agents", "compact", "make_pool", "permute", "remove_agents",
+    "AgentPool", "add_agents", "compact", "compact_indices", "make_pool",
+    "permute", "remove_agents",
     "StepContext", "apoptosis", "brownian_motion", "cell_division", "chemotaxis",
     "growth", "random_movement", "secretion", "sir_infection", "sir_recovery",
     "SUSCEPTIBLE", "INFECTED", "RECOVERED",

@@ -32,12 +32,28 @@ All static shapes: halo/migration buffers have fixed capacities and overflow
 *counters* (never UB).  Coordinates are stored in the device-local frame so
 the whole step is a single SPMD program; the global space is a torus (the
 paper's §4.4.11 toroidal boundary).
+
+Per-iteration dataflow (DESIGN.md §4 distributed adoption):
+
+  * the neighbor index is built ONCE over the halo-extended grid (halo agents
+    land in its boundary cells); behaviors / forces share it through a lazy
+    :class:`~repro.core.neighbors.NeighborContext` — the dense ``(C, 27M)``
+    candidate tensor only exists if something actually reads it, so
+    ``force_impl="fused"`` steps never touch it;
+  * packing (``migrate`` / ``halo_exchange``) is sort-free: channel selection
+    and free-slot insertion are cumsum-rank compaction scatters
+    (`agents.compact_indices`), not stable argsorts over the pool — O(C) and
+    no (C,) permutation tensors on the 10-channel/step hot path;
+  * wire bytes are accounted per step into ``DistState.halo_payload_bytes`` /
+    ``halo_baseline_bytes`` so the §6.2.3 compression ratio is observable
+    (``halo_wire_stats``).
 """
 
 from __future__ import annotations
 
 import dataclasses
 import functools
+import inspect
 import math
 from typing import Dict, Optional, Tuple
 
@@ -47,29 +63,32 @@ import numpy as np
 
 from . import delta as dcodec
 from . import diffusion as dgrid
-from .agents import AgentPool, make_pool, remove_agents
+from .agents import AgentPool, compact_indices, free_slot_table, make_pool, remove_agents
 from .behaviors import StepContext
 from .engine import EngineConfig
-from .forces import forces_from_candidates, forces_from_candidates_tiled, mechanical_forces
-from .grid import (
-    GridIndex,
-    GridSpec,
-    build_index_arrays,
-    candidate_neighbors_arrays,
-    sort_agents,
-)
+from .forces import mechanical_forces
+from .grid import GridSpec, build_index_arrays, sort_agents
 from .neighbors import NeighborContext
 
 try:  # JAX >= 0.6
     from jax import shard_map as _shard_map
-
-    def shard_map(f, mesh, in_specs, out_specs):
-        return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs)
 except ImportError:  # pragma: no cover
-    from jax.experimental.shard_map import shard_map as _legacy_shard_map
+    from jax.experimental.shard_map import shard_map as _shard_map
 
-    def shard_map(f, mesh, in_specs, out_specs):
-        return _legacy_shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs)
+# Disable the replication checker where the installed jax exposes it
+# (check_rep on legacy, check_vma on new): it has no rule for pallas_call,
+# which the fused force path places inside the per-device step body.
+_SHARD_MAP_KW = {
+    flag: False
+    for flag in ("check_rep", "check_vma")
+    if flag in inspect.signature(_shard_map).parameters
+}
+
+
+def shard_map(f, mesh, in_specs, out_specs):
+    return _shard_map(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **_SHARD_MAP_KW
+    )
 
 from jax.sharding import PartitionSpec as P
 
@@ -165,7 +184,14 @@ class HaloCodecState:
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
 class DistState:
-    """Per-device simulation state (stacked on a leading device axis)."""
+    """Per-device simulation state (stacked on a leading device axis).
+
+    halo_payload_bytes / halo_baseline_bytes: cumulative per-device wire-byte
+    account of ``halo_exchange`` (§6.2.2/§6.2.3 observability) — payload is
+    what the codec actually ships, baseline the untruncated f32 full-attribute
+    record.  i32 like the overflow counters; wraps after ~2 GiB of traffic
+    (read and reset between epochs at scale).
+    """
 
     pool: AgentPool
     grids: Dict[str, dgrid.DiffusionGrid]
@@ -174,6 +200,8 @@ class DistState:
     step: Array               # () i32
     migrate_overflow: Array   # () i32
     halo_overflow: Array      # () i32
+    halo_payload_bytes: Array   # () i32
+    halo_baseline_bytes: Array  # () i32
 
 
 # ---------------------------------------------------------------------------
@@ -184,11 +212,15 @@ class DistState:
 def _select(mask: Array, capacity: int) -> Tuple[Array, Array, Array]:
     """Deterministic compaction of up to ``capacity`` set indices.
 
+    Sort-free: cumsum-rank + bounded scatter (`agents.compact_indices`)
+    instead of a full stable argsort over the pool.  This runs once per
+    (dim, direction) channel — up to 10× per step across ``migrate`` and
+    ``halo_exchange`` — so the stable sorts it replaces dominated the
+    packing cost at scale.  Invalid ranks point at index 0 (a real row;
+    consumers mask with ``valid``).
+
     Returns (ids (cap,), valid (cap,), overflow ())."""
-    n = jnp.sum(mask.astype(jnp.int32))
-    order = jnp.argsort(~mask, stable=True)
-    ids = order[:capacity].astype(jnp.int32)
-    valid = jnp.arange(capacity) < jnp.minimum(n, capacity)
+    ids, valid, n = compact_indices(mask, capacity)
     overflow = jnp.maximum(n - capacity, 0)
     return ids, valid, overflow
 
@@ -211,8 +243,7 @@ def _insert_records(pool: AgentPool, rec: Dict[str, Array], valid: Array) -> Age
     r = valid.shape[0]
     free = ~pool.alive
     n_free = jnp.sum(free.astype(jnp.int32))
-    slot_ids = jnp.where(free, jnp.arange(c), c)
-    free_slots = jnp.sort(slot_ids)
+    free_slots = free_slot_table(pool.alive)   # sort-free rank → slot table
     rank = jnp.cumsum(valid.astype(jnp.int32)) - 1
     fits = valid & (rank < n_free)
     target = jnp.where(fits, free_slots[jnp.clip(rank, 0, c - 1)], c)
@@ -357,6 +388,7 @@ def halo_exchange(
     h = dcfg.halo_capacity
     wire = {"payload_bytes": 0, "baseline_bytes": 0}
     wire_dtype = {"int16": jnp.int16, "int8": jnp.int8}.get(dcfg.halo_codec)
+    bits = lambda n: (n + 7) // 8   # bitmask wire size, ceil (never 0 bytes)
 
     g_pos = pool.position
     g_rad = pool.radius()
@@ -391,14 +423,18 @@ def halo_exchange(
                 q, fresh, codec = _codec_encode(dcfg, codec, d, s, pos, slot_ids, wire_dtype)
                 payload = dict(q=q, fresh=fresh, rad=rad, kind=knd, valid=valid)
                 wire["payload_bytes"] += (
-                    q.size * q.dtype.itemsize + fresh.size // 8 + rad.size * 4
-                    + knd.size + valid.size // 8
+                    q.size * q.dtype.itemsize + bits(fresh.size) + rad.size * 4
+                    + knd.size + bits(valid.size)
                 )
             else:
                 payload = dict(pos=pos, rad=rad, kind=knd, valid=valid)
-                wire["payload_bytes"] += pos.size * 4 + rad.size * 4 + knd.size + valid.size // 8
+                wire["payload_bytes"] += (
+                    pos.size * 4 + rad.size * 4 + knd.size + bits(valid.size)
+                )
             # Baseline = untruncated f32 full-attribute record (pos+rad+kind as f32/i32).
-            wire["baseline_bytes"] += pos.size * 4 + rad.size * 4 + knd.size * 4 + valid.size // 8
+            wire["baseline_bytes"] += (
+                pos.size * 4 + rad.size * 4 + knd.size * 4 + bits(valid.size)
+            )
             packs.append((payload, sign))
 
         for s, (payload, sign) in enumerate(packs):
@@ -474,32 +510,18 @@ def distributed_step(
     pool, mig_ovf = migrate(dcfg, pool)
 
     # 2. aura exchange
-    g_pos, g_rad, g_kind, g_alive, codec, halo_ovf, _ = halo_exchange(
+    g_pos, g_rad, g_kind, g_alive, codec, halo_ovf, wire = halo_exchange(
         dcfg, pool, state.codec
     )
 
-    # 3. environment over ghost-extended set; queries = local agents only.
-    # (Still the dense candidate path — fused cell-list adoption for the
-    # distributed engine is an open ROADMAP item.)
+    # 3. environment over the ghost-extended set; queries = local agents only.
+    # The halo-extended GridIndex is built once and shared by behaviors,
+    # forces, and the fused cell-list kernel (DESIGN.md §4); the dense
+    # (C, 27M) candidate tensor is lazy — with candidate-free behaviors and
+    # force_impl="fused" it is never materialized.
     index = build_index_arrays(ecfg.spec, g_pos, g_alive)
-    cand, cand_mask = candidate_neighbors_arrays(
-        ecfg.spec,
-        index,
-        pool.position,
-        pool.alive,
-        query_ids=jnp.arange(pool.capacity, dtype=jnp.int32),
-    )
-    neighbors = NeighborContext(
-        spec=ecfg.spec,
-        index=index,
-        src_position=g_pos,
-        src_radius=g_rad,
-        src_kind=g_kind,
-        src_alive=g_alive,
-        query_position=pool.position,
-        query_alive=pool.alive,
-        query_ids=jnp.arange(pool.capacity, dtype=jnp.int32),
-        _cand=(cand, cand_mask),
+    neighbors = NeighborContext.for_sources(
+        ecfg.spec, index, pool, g_pos, g_rad, g_kind, g_alive
     )
 
     ctx = StepContext(
@@ -516,24 +538,26 @@ def distributed_step(
     for behavior in ecfg.behaviors:
         ctx, pool = behavior(ctx, pool)
 
-    # 5. mechanical forces against the ghost-extended neighborhood
+    # 5. mechanical forces against the ghost-extended neighborhood — the same
+    # dispatcher as the single-node engine: impl="fused" walks the halo-
+    # extended cell list directly (ghost agents sit in boundary cells, so the
+    # kernel's column decomposition applies unchanged; its scatter-back is
+    # restricted to local rows) with the lax.cond dense fallback on cell
+    # overflow; the reference/pallas impls gather from the ghost-extended
+    # source arrays through the shared lazy candidates.
     if ecfg.force_params is not None:
-        if ecfg.force_tile:
-            force = forces_from_candidates_tiled(
-                pool.position, pool.radius(), cand, cand_mask,
-                ecfg.force_params, g_pos, g_rad, tile=ecfg.force_tile,
-            )
-        else:
-            force = forces_from_candidates(
-                pool.position,
-                pool.radius(),
-                cand,
-                cand_mask,
-                ecfg.force_params,
-                all_position=g_pos,
-                all_radius=g_rad,
-            )
-        force = jnp.where(pool.alive[:, None], force, 0.0)
+        force = mechanical_forces(
+            ecfg.spec,
+            index,
+            pool,
+            ecfg.force_params,
+            active_capacity=ecfg.active_capacity,
+            impl=ecfg.force_impl,
+            neighbors=neighbors,
+            fused_fallback=ecfg.fused_overflow_fallback,
+            interpret=ecfg.kernel_interpret,
+            tile=ecfg.force_tile,
+        )
         pool = pool.replace(position=pool.position + force * ecfg.dt)
 
     # Keep non-decomposed dims inside [0, depth] (closed); decomposed dims
@@ -568,6 +592,8 @@ def distributed_step(
         step=state.step + 1,
         migrate_overflow=state.migrate_overflow + mig_ovf,
         halo_overflow=state.halo_overflow + halo_ovf,
+        halo_payload_bytes=state.halo_payload_bytes + wire["payload_bytes"],
+        halo_baseline_bytes=state.halo_baseline_bytes + wire["baseline_bytes"],
     )
 
 
@@ -639,6 +665,8 @@ def init_dist_state(
         step=zeros,
         migrate_overflow=zeros,
         halo_overflow=zeros,
+        halo_payload_bytes=zeros,
+        halo_baseline_bytes=zeros,
     )
 
 
@@ -678,3 +706,64 @@ def global_kind_counts(state: DistState, n_kinds: int = 3) -> Array:
     alive = state.pool.alive.reshape(-1)
     onehot = (kind[:, None] == jnp.arange(n_kinds)[None, :]) & alive[:, None]
     return jnp.sum(onehot.astype(jnp.int32), axis=0)
+
+
+def halo_wire_stats(state: DistState) -> Dict[str, float]:
+    """Host-side halo-traffic observable (§6.2.2/§6.2.3 compression account).
+
+    Sums the per-device cumulative counters and reports the achieved
+    compression ratio (baseline f32 full-record bytes / payload bytes
+    actually shipped; 1.0 when nothing was sent yet).  ``wrapped`` flags an
+    i32 counter overflow (~2 GiB of traffic on some device) — the ratio is
+    garbage then; call :func:`reset_halo_wire_counters` between epochs.
+    """
+    # Host-side i64 sum: the per-device counters are i32, but the cross-
+    # device total must not wrap at 2^31 (x64 is typically disabled in jax).
+    payload = float(np.asarray(state.halo_payload_bytes, dtype=np.int64).sum())
+    baseline = float(np.asarray(state.halo_baseline_bytes, dtype=np.int64).sum())
+    wrapped = bool(
+        np.any(np.asarray(state.halo_payload_bytes) < 0)
+        | np.any(np.asarray(state.halo_baseline_bytes) < 0)
+    )
+    return {
+        "payload_bytes": payload,
+        "baseline_bytes": baseline,
+        "compression_ratio": baseline / payload if payload > 0 else 1.0,
+        "wrapped": wrapped,
+    }
+
+
+def reset_halo_wire_counters(state: DistState) -> DistState:
+    """Zero the cumulative wire counters (read via :func:`halo_wire_stats`
+    and reset between measurement epochs to stay clear of the i32 wrap)."""
+    zeros = jnp.zeros_like(state.halo_payload_bytes)
+    return dataclasses.replace(
+        state, halo_payload_bytes=zeros, halo_baseline_bytes=zeros
+    )
+
+
+def make_packing_program(mesh, dcfg: DomainConfig):
+    """jit-ed migrate + halo_exchange over the stacked state — the packing
+    subgraph in isolation.  Shared by tests/benchmarks that assert it lowers
+    with zero sort ops (see :func:`hlo_sort_count`); not part of the step.
+    """
+    axes = tuple(dcfg.mesh_axes)
+
+    def body(state: DistState):
+        local = jax.tree.map(lambda x: x[0], state)
+        pool, mig_ovf = migrate(dcfg, local.pool)
+        g_pos, g_rad, g_kind, g_alive, codec, halo_ovf, _ = halo_exchange(
+            dcfg, pool, local.codec
+        )
+        out = (pool, g_pos, g_rad, g_kind, g_alive, codec, mig_ovf, halo_ovf)
+        return jax.tree.map(lambda x: x[None], out)
+
+    spec_leading = P(axes)
+    return jax.jit(
+        shard_map(body, mesh=mesh, in_specs=spec_leading, out_specs=spec_leading)
+    )
+
+
+def hlo_sort_count(lowered_text: str) -> int:
+    """Count sort ops in lowered (StableHLO) or compiled (HLO) module text."""
+    return lowered_text.count("stablehlo.sort") + lowered_text.count(" sort(")

@@ -137,6 +137,7 @@ def simulation_step(config: EngineConfig, state: SimulationState) -> SimulationS
             neighbors=neighbors,
             fused_fallback=config.fused_overflow_fallback,
             interpret=config.kernel_interpret,
+            tile=config.force_tile,
         )
         pool = pool.replace(position=pool.position + force * config.dt)
 

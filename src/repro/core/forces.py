@@ -28,7 +28,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from .agents import AgentPool
+from .agents import AgentPool, compact_indices
 from .grid import GridIndex, GridSpec, neighbor_cell_ids
 from .neighbors import NeighborContext
 
@@ -148,6 +148,7 @@ def mechanical_forces(
     neighbors: Optional[NeighborContext] = None,
     fused_fallback: bool = True,
     interpret: bool = True,
+    tile: Optional[int] = None,
 ) -> Array:
     """Net mechanical force per agent, (C, 3).
 
@@ -161,12 +162,22 @@ def mechanical_forces(
     ``neighbors``: the step's :class:`NeighborContext`; built here when
     absent (standalone calls), passed in by the engine so the dense
     candidate tensor is materialized at most once per iteration — and, on
-    the fused path, not at all.  ``fused_fallback`` guards the fused path's
-    cell-list truncation: when any cell overflowed ``max_per_cell`` a
-    ``lax.cond`` re-evaluates through the reference candidate path
-    (correctness first, like the §5.5 compaction fallback below).
-    ``interpret`` selects Pallas interpret mode for the kernel impls (the
-    CPU-container default; pass False on TPU for the Mosaic lowering).
+    the fused path, not at all.  When the context's source arrays are a
+    ghost-extended superset of the pool (the distributed engine, §6.2.1),
+    all impls gather pair data from those sources; their local rows are
+    refreshed to the pool's current (post-behavior) state, exactly what the
+    single-node engine sees, while halo rows keep the exchange-time
+    snapshot.  The fused kernel's slot forces then scatter back to *local*
+    rows only (ghost slots drop) so the result stays (C, 3).
+
+    ``fused_fallback`` guards the fused path's cell-list truncation: when
+    any cell overflowed ``max_per_cell`` a ``lax.cond`` re-evaluates through
+    the reference candidate path (correctness first, like the §5.5
+    compaction fallback below).  ``interpret`` selects Pallas interpret mode
+    for the kernel impls (the CPU-container default; pass False on TPU for
+    the Mosaic lowering).  ``tile``: evaluate the dense candidate path in
+    agent tiles of this size (bounds the (tile, K, 3) working set; applies
+    to the reference impl and the fused path's overflow fallback).
 
     Note: combining ``impl="fused"`` with ``active_capacity`` keeps the
     §5.5 compaction semantics but not the fused path's byte savings — the
@@ -177,6 +188,29 @@ def mechanical_forces(
     if neighbors is None:
         neighbors = NeighborContext.for_pool(spec, index, pool)
     radius = pool.radius()
+    c = pool.capacity
+
+    if neighbors.src_position.shape[0] == c:
+        # Single-node: the sources ARE the pool — use its current arrays
+        # (behaviors may have moved agents since the context was built).
+        src_pos, src_rad = pool.position, radius
+    else:
+        # Ghost-extended sources (distributed): refresh the local rows to the
+        # pool's current state; halo rows keep the exchange-time snapshot.
+        src_pos = neighbors.src_position.at[:c].set(pool.position)
+        src_rad = neighbors.src_radius.at[:c].set(radius)
+
+    def dense_eval(cache: bool) -> Array:
+        cand, mask = neighbors.candidates(cache=cache)
+        if tile:
+            return forces_from_candidates_tiled(
+                pool.position, radius, cand, mask, params,
+                src_pos, src_rad, tile=tile,
+            )
+        return forces_from_candidates(
+            pool.position, radius, cand, mask, params,
+            all_position=src_pos, all_radius=src_rad,
+        )
 
     # Candidate-consuming impls always need the dense tensor somewhere in the
     # step; build (or reuse) it here, at top trace level, so consumers inside
@@ -194,47 +228,41 @@ def mechanical_forces(
             pool.position, radius, *neighbors.candidates(),
             k=params.repulsion_k, gamma=params.attraction_gamma,
             interpret=interpret,
+            all_position=src_pos, all_radius=src_rad,
         )
     elif impl == "fused":
         from repro.kernels.cell_force import ops as cf_ops
 
         fused = lambda: cf_ops.cell_list_force(
-            pool.position, radius, index.cell_list, spec.dims,
+            src_pos, src_rad, index.cell_list, spec.dims,
             k=params.repulsion_k, gamma=params.attraction_gamma,
-            interpret=interpret,
+            interpret=interpret, num_out=c,
         )
         if fused_fallback:
             dense = lambda: jax.lax.cond(
                 index.overflowed,
-                lambda: forces_from_candidates(
-                    pool.position, radius,
-                    *neighbors.candidates(cache=False), params,
-                ),
+                lambda: dense_eval(cache=False),
                 fused,
             )
         else:
             dense = fused
     else:
-        dense = lambda: forces_from_candidates(
-            pool.position, radius, *neighbors.candidates(), params
-        )
+        dense = lambda: dense_eval(cache=True)
 
     if active_capacity is None:
         force = dense()
         return jnp.where(pool.alive[:, None], force, 0.0)
 
     # ---- §5.5 static-agent omission via work compaction -------------------
-    c = pool.capacity
     a = int(active_capacity)
     active = pool.alive & ~pool.static
     n_active = jnp.sum(active.astype(jnp.int32))
 
     def compacted_path(_):
-        # Deterministic compaction: indices of active agents first (stable).
+        # Deterministic sort-free compaction: active ids in index order
+        # (rank = prefix sum + bounded scatter; no stable argsort).
         cand, mask = neighbors.candidates(cache=False)
-        order = jnp.argsort(~active, stable=True)          # active ids first
-        act_ids = order[:a]                                # (A,)
-        act_valid = jnp.arange(a) < jnp.minimum(n_active, a)
+        act_ids, act_valid, _ = compact_indices(active, a)
         gather = lambda x: jnp.take(x, act_ids, axis=0)
         sub_force = forces_from_candidates(
             gather(pool.position),
@@ -242,8 +270,8 @@ def mechanical_forces(
             gather(cand),
             gather(mask) & act_valid[:, None],
             params,
-            all_position=pool.position,
-            all_radius=radius,
+            all_position=src_pos,
+            all_radius=src_rad,
         )
         return (
             jnp.zeros((c, 3), sub_force.dtype)

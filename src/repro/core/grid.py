@@ -107,6 +107,12 @@ def sort_agents(spec: GridSpec, pool: AgentPool) -> AgentPool:
 def build_index_arrays(spec: GridSpec, position: Array, alive: Array) -> GridIndex:
     """Build the cell list (the §5.3.1 'build stage'), fully parallel.
 
+    ``position``/``alive`` may be a ghost-extended superset of the local pool
+    (the distributed engine indexes local + halo agents together; halo agents
+    land in the boundary cells of the halo-extended ``spec``, which is what
+    lets the fused cell-list force kernel consume this index unchanged —
+    DESIGN.md §4).
+
     Steps (all O(C) scatters/segment-sums — the TPU analogue of the paper's
     timestamped O(#agents) build):
       1. cell id per agent;

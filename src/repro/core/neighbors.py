@@ -75,6 +75,35 @@ class NeighborContext:
             query_alive=pool.alive,
         )
 
+    @classmethod
+    def for_sources(
+        cls,
+        spec: GridSpec,
+        index: GridIndex,
+        pool: AgentPool,
+        src_position: Array,
+        src_radius: Array,
+        src_kind: Array,
+        src_alive: Array,
+    ) -> "NeighborContext":
+        """Distributed case (§6.2.1): queries are the local pool, sources the
+        ghost-extended (local + halo) arrays the ``index`` was built over.
+        The first ``pool.capacity`` source rows are the local pool itself, so
+        ``query_ids`` is a plain arange into the sources.  The candidate
+        tensor stays lazy: a distributed step whose behaviors and force impl
+        all walk the cell list never materializes it."""
+        return cls(
+            spec=spec,
+            index=index,
+            src_position=src_position,
+            src_radius=src_radius,
+            src_kind=src_kind,
+            src_alive=src_alive,
+            query_position=pool.position,
+            query_alive=pool.alive,
+            query_ids=jnp.arange(pool.capacity, dtype=jnp.int32),
+        )
+
     def candidates(self, cache: bool = True) -> Tuple[Array, Array]:
         """The dense ``(N, 27M)`` candidate ids + mask, built at most once.
 

@@ -33,6 +33,14 @@ center offset at dz = 0 — one static mask, no id comparison.
 Validated in interpret mode against ref.py (CPU container); on TPU hardware
 the same code lowers through Mosaic.  VMEM per program is O(nz·M) block rows
 plus O(nz·M²) pair temporaries.
+
+Distributed adoption (§6.2.1, DESIGN.md §4): the kernel is oblivious to the
+local/ghost split — the distributed engine builds the cell list over its
+halo-*extended* grid (halo agents land in boundary cells, so the column
+decomposition and the 9-offset shift arithmetic apply unchanged) and
+restricts the scatter-back in ops.py to local rows (``num_out``).  Ghost
+slots cost kernel FLOPs but no extra HBM layout: they are ordinary occupied
+slots of boundary columns.
 """
 
 from __future__ import annotations

@@ -56,27 +56,37 @@ def _cell_major_planar(
 
 
 @functools.partial(
-    jax.jit, static_argnames=("dims", "k", "gamma", "impl", "interpret")
+    jax.jit, static_argnames=("dims", "k", "gamma", "impl", "interpret", "num_out")
 )
 def cell_list_force(
-    position: Array,    # (C, 3) f32
-    radius: Array,      # (C,) f32
-    cell_list: Array,   # (n_cells, M) int32, empty slots = C
+    position: Array,    # (S, 3) f32 — all indexed agents (pool, or pool+ghosts)
+    radius: Array,      # (S,) f32
+    cell_list: Array,   # (n_cells, M) int32, empty slots = S
     dims: tuple,        # (nx, ny, nz) static — n_cells must equal nx·ny·nz
     k: float = 2.0,
     gamma: float = 1.0,
     impl: str = "pallas",
     interpret: bool = True,
+    num_out: int | None = None,
 ) -> Array:
-    """Net Eq-4.1 force per agent, (C, 3), straight from the cell list."""
+    """Net Eq-4.1 force per agent, (num_out, 3), straight from the cell list.
+
+    ``num_out`` (default: all S rows) restricts the scatter-back to the first
+    ``num_out`` source rows — the distributed engine passes its local pool
+    capacity so forces land on local agents only while ghost (halo) slots'
+    contributions are computed in-kernel but dropped by the scatter (§6.2.1:
+    ghosts are read-only copies; their owners integrate them remotely).
+    """
     nx, ny, nz = dims
     n_cells, m = cell_list.shape
     assert n_cells == nx * ny * nz, (cell_list.shape, dims)
     c = position.shape[0]
+    out_n = c if num_out is None else int(num_out)
 
     if impl == "reference":
         return cell_list_force_ref(
-            position, radius, cell_list, dims, k=k, gamma=gamma
+            position, radius, cell_list, dims, k=k, gamma=gamma,
+            num_out=num_out,
         )
 
     cpos, crad, cval = _cell_major_planar(position, radius, cell_list, dims)
@@ -85,7 +95,10 @@ def cell_list_force(
     )                                                       # (3, n_cols, nz, M)
 
     # Scatter per-slot forces back to agent order.  Empty slots carry exactly
-    # zero (masked in-kernel) and their sentinel index C lands in a trash row.
+    # zero (masked in-kernel); their sentinel index S — and any ghost row
+    # ≥ num_out — is out of range and drops.
     slot_force = slot_force.reshape(3, n_cells * m).T       # (n_cells·M, 3)
     slots = cell_list.reshape(-1)
-    return jnp.zeros((c + 1, 3), jnp.float32).at[slots].add(slot_force)[:c]
+    return jnp.zeros((out_n, 3), jnp.float32).at[slots].add(
+        slot_force, mode="drop"
+    )

@@ -20,16 +20,18 @@ _OFFSETS = [
 
 
 def cell_list_force_ref(
-    position: Array,   # (C, 3) f32
-    radius: Array,     # (C,) f32
-    cell_list: Array,  # (n_cells, M) int32, empty slots = C
+    position: Array,   # (S, 3) f32
+    radius: Array,     # (S,) f32
+    cell_list: Array,  # (n_cells, M) int32, empty slots = S
     dims: tuple,       # (nx, ny, nz)
     k: float = 2.0,
     gamma: float = 1.0,
+    num_out: int | None = None,
 ) -> Array:
     nx, ny, nz = dims
     n_cells, m = cell_list.shape
     c = position.shape[0]
+    out_n = c if num_out is None else int(num_out)
 
     # (x, y, z) of every cell, from the row-major linear id.
     ids = jnp.arange(n_cells, dtype=jnp.int32)
@@ -80,9 +82,8 @@ def cell_list_force_ref(
     scale = jnp.where(overlap, mag / dist, 0.0)
     slot_force = jnp.sum(scale[..., None] * dx, axis=2)        # (n_cells, M, 3)
 
+    # Sentinel S and ghost rows ≥ num_out are out of range and drop.
     slots = cell_list.reshape(-1)
-    return (
-        jnp.zeros((c + 1, 3), jnp.float32)
-        .at[slots]
-        .add(slot_force.reshape(-1, 3))[:c]
+    return jnp.zeros((out_n, 3), jnp.float32).at[slots].add(
+        slot_force.reshape(-1, 3), mode="drop"
     )

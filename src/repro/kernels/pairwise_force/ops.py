@@ -31,20 +31,30 @@ def _pad_to(x: Array, axis: int, multiple: int) -> Array:
 
 @functools.partial(jax.jit, static_argnames=("k", "gamma", "impl", "interpret"))
 def pairwise_force(
-    position: Array,   # (N, 3) f32
+    position: Array,   # (N, 3) f32 query agents
     radius: Array,     # (N,) f32
-    cand: Array,       # (N, K) int32 indices into position/radius
+    cand: Array,       # (N, K) int32 indices into the source arrays
     cand_mask: Array,  # (N, K) bool
     k: float = 2.0,
     gamma: float = 1.0,
     impl: str = "pallas",
     interpret: bool = True,
+    all_position: Array | None = None,  # (S, 3) candidate sources (default: queries)
+    all_radius: Array | None = None,    # (S,)
 ) -> Array:
-    """Net Eq-4.1 force per agent, (N, 3)."""
+    """Net Eq-4.1 force per agent, (N, 3).
+
+    ``all_position``/``all_radius``: the arrays candidate ids index into when
+    they are a superset of the queries — the distributed engine's
+    ghost-extended (local + halo) arrays (§6.2.1).  Defaults to the query
+    arrays (single-node: sources == queries).
+    """
     n, kdim = cand.shape
+    src_pos = position if all_position is None else all_position
+    src_rad = radius if all_radius is None else all_radius
     safe = jnp.where(cand_mask, cand, 0)
-    cand_pos = jnp.take(position, safe, axis=0)    # (N, K, 3)
-    cand_rad = jnp.take(radius, safe, axis=0)      # (N, K)
+    cand_pos = jnp.take(src_pos, safe, axis=0)     # (N, K, 3)
+    cand_rad = jnp.take(src_rad, safe, axis=0)     # (N, K)
 
     if impl == "reference":
         return pairwise_force_ref(

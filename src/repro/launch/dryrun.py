@@ -285,9 +285,18 @@ class SkipCell(Exception):
     pass
 
 
+def cost_analysis_dict(compiled) -> Dict[str, float]:
+    """``compiled.cost_analysis()`` across jax versions (older jax returns a
+    one-element list of dicts, newer a plain dict)."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    return cost
+
+
 def _cell_costs(lowered) -> Dict[str, float]:
     compiled = lowered.compile()
-    cost = compiled.cost_analysis()
+    cost = cost_analysis_dict(compiled)
     hlo = _strip_done_ops(compiled.as_text())
     coll = collective_bytes_from_hlo(hlo)
     return {
@@ -397,6 +406,8 @@ def lower_teraagent(mesh):
         step=sds((n_dev,), jnp.int32),
         migrate_overflow=sds((n_dev,), jnp.int32),
         halo_overflow=sds((n_dev,), jnp.int32),
+        halo_payload_bytes=sds((n_dev,), jnp.int32),
+        halo_baseline_bytes=sds((n_dev,), jnp.int32),
     )
     from jax.sharding import NamedSharding, PartitionSpec as P
 

@@ -5,6 +5,7 @@ Exits 0 on success; prints diagnostics.  Kept out of pytest collection —
 tests/test_distributed.py spawns it with XLA_FLAGS set.
 """
 
+import dataclasses
 import os
 import sys
 
@@ -27,15 +28,16 @@ from repro.core import (  # noqa: E402
 from repro.core.distributed import (  # noqa: E402
     DomainConfig,
     global_kind_counts,
+    halo_wire_stats,
     init_dist_state,
     make_distributed_step,
 )
 
 
 def _mesh(shape, names):
-    return jax.make_mesh(
-        shape, names, axis_types=(jax.sharding.AxisType.Auto,) * len(shape)
-    )
+    from repro.launch.mesh import make_mesh  # jax-version-compat axis_types
+
+    return make_mesh(shape, names)
 
 
 def _force_only_setup(halo_codec):
@@ -74,12 +76,19 @@ def _force_only_setup(halo_codec):
     return mesh, dcfg, ecfg, pos, n
 
 
-def _single_node_reference(pos, n_steps, dt=0.05):
+def _single_node_reference(
+    pos, n_steps, dt=0.05, force_impl="reference", box=2.0, max_per_cell=32
+):
     """Same physics on one device in global coordinates (open z, toroidal
-    x/y is irrelevant here: diameter 1.6 agents stay far from edges)."""
+    x/y is irrelevant here: diameter 1.6 agents stay far from edges).
+
+    ``box``/``max_per_cell`` only change the grid resolution, not the
+    physics (any box ≥ the 1.6 interaction diameter yields a candidate
+    superset); the fused reference uses a coarser grid because interpret-
+    mode kernel cost scales with the program count (n_cols × 9)."""
     n = pos.shape[0]
     pool = make_pool(n, jnp.asarray(pos), diameter=1.6)
-    spec = spec_for_space(0.0, 64.0, 2.0, max_per_cell=32)
+    spec = spec_for_space(0.0, 64.0, box, max_per_cell=max_per_cell)
     ecfg = EngineConfig(
         spec=spec,
         behaviors=(),
@@ -89,6 +98,7 @@ def _single_node_reference(pos, n_steps, dt=0.05):
         max_bound=64.0,
         boundary="open",
         sort_frequency=4,
+        force_impl=force_impl,
     )
     state = init_state(pool)
     final, _ = run_jit(ecfg, state, n_steps)
@@ -168,6 +178,234 @@ def scenario_codec_reduction():
     print("codec reduction OK")
 
 
+def _fused_ecfg(ecfg, fallback=False):
+    return dataclasses.replace(ecfg, force_impl="fused", fused_overflow_fallback=fallback)
+
+
+def scenario_fused_parity(tol_dense=5e-4, tol_single=1e-3):
+    """Distributed fused force pass (DESIGN.md §4 adoption) vs (a) the dense
+    distributed path — slot-aligned, differing only by float summation order —
+    and (b) the single-node fused engine (nearest-match, §6.3.3 style).
+
+    The layout plants clusters straddling device *corners* (x and y device
+    boundaries simultaneously) so corner-halo agents — the multi-phase
+    routing's hardest case — carry real forces through the fused kernel.
+    """
+    mesh, dcfg, ecfg, pos, n = _force_only_setup("int16")
+    rng = np.random.default_rng(3)
+    # Clusters of overlapping agents centered on device-corner junctions.
+    corners = [(16.0, 16.0), (32.0, 16.0), (48.0, 16.0)]
+    extra = []
+    for cx, cy in corners:
+        extra.append(
+            np.stack(
+                [
+                    rng.uniform(cx - 1.5, cx + 1.5, 24),
+                    rng.uniform(cy - 1.5, cy + 1.5, 24),
+                    rng.uniform(4.0, 12.0, 24),
+                ],
+                axis=1,
+            )
+        )
+    pos = np.concatenate([pos] + extra).astype(np.float32)
+    n = pos.shape[0]
+    n_steps = 8
+
+    state0 = init_dist_state(dcfg, capacity=256, positions=pos, diameter=1.6)
+    finals = {}
+    for name, cfg in (("dense", ecfg), ("fused", _fused_ecfg(ecfg))):
+        step = make_distributed_step(mesh, dcfg, cfg)
+        s = state0
+        for _ in range(n_steps):
+            s = step(s)
+        assert int(np.asarray(s.pool.alive).sum()) == n, name
+        assert int(np.asarray(s.halo_overflow).sum()) == 0, name
+        finals[name] = s
+    # (a) slot-aligned distributed dense vs fused.
+    d = np.abs(
+        np.asarray(finals["dense"].pool.position)
+        - np.asarray(finals["fused"].pool.position)
+    ).max()
+    print(f"max slot-aligned |dense - fused| after {n_steps} steps = {d:.2e}")
+    assert d < tol_dense, d
+
+    # (b) nearest-match parity vs the single-node *fused* engine.
+    dist_pos = _global_positions(dcfg, finals["fused"])
+    ref_pos, ref_alive = _single_node_reference(
+        pos, n_steps, force_impl="fused", box=4.0, max_per_cell=48
+    )
+    ref = ref_pos[ref_alive]
+    assert dist_pos.shape[0] == ref.shape[0] == n
+    dmat = np.linalg.norm(dist_pos[:, None, :] - ref[None, :, :], axis=-1)
+    worst = float(dmat.min(axis=1).max())
+    print(f"worst agent deviation vs single-node fused = {worst:.5f}")
+    assert worst < tol_single, worst
+    assert len(set(dmat.argmin(axis=1).tolist())) == n
+    print("fused parity OK")
+
+
+def scenario_fused_dead_agents(tol=5e-4):
+    """Dead pool slots must stay invisible to the fused path exactly as they
+    are to the dense one (they never enter the halo-extended cell list)."""
+    mesh, dcfg, ecfg, pos, n = _force_only_setup("int16")
+    state0 = init_dist_state(dcfg, capacity=192, positions=pos, diameter=1.6)
+    # Kill a deterministic scattering of slots on every device.
+    alive = np.asarray(state0.pool.alive).copy()
+    kill = np.zeros_like(alive)
+    kill[:, 3::17] = True
+    alive &= ~kill
+    state0 = dataclasses.replace(
+        state0, pool=state0.pool.replace(alive=jnp.asarray(alive))
+    )
+    n_alive = int(alive.sum())
+
+    finals = {}
+    for name, cfg in (("dense", ecfg), ("fused", _fused_ecfg(ecfg))):
+        step = make_distributed_step(mesh, dcfg, cfg)
+        s = state0
+        for _ in range(10):
+            s = step(s)
+        assert int(np.asarray(s.pool.alive).sum()) == n_alive, name
+        finals[name] = _global_positions(dcfg, s)
+    a = finals["dense"][np.lexsort(finals["dense"].T)]
+    b = finals["fused"][np.lexsort(finals["fused"].T)]
+    d = np.abs(a - b).max()
+    print(f"dead-agent run: {n_alive}/{n} alive, max |dense - fused| = {d:.2e}")
+    assert d < tol, d
+    print("fused dead agents OK")
+
+
+def scenario_fused_overflow_fallback():
+    """Cell-list overflow on the halo-extended grid must flip the fused path
+    onto its lax.cond dense fallback, reproducing the dense distributed step
+    exactly (same candidate computation, same summation order)."""
+    mesh, dcfg, ecfg, pos, n = _force_only_setup("int16")
+    # Overcrowd one box: 12 agents inside a single 2.0-cell on device (0, 0),
+    # with max_per_cell=4 the halo-extended index overflows every step.
+    spec = dcfg.grid_spec(box_size=2.0, max_per_cell=4)
+    ecfg = dataclasses.replace(ecfg, spec=spec, dt=0.01)
+    rng = np.random.default_rng(9)
+    blob = rng.uniform(5.0, 6.5, (12, 3)).astype(np.float32)
+    pos = np.concatenate([pos, blob]).astype(np.float32)
+    n = pos.shape[0]
+
+    state0 = init_dist_state(dcfg, capacity=256, positions=pos, diameter=1.6)
+    finals = {}
+    for name, cfg in (("dense", ecfg), ("fused_fb", _fused_ecfg(ecfg, fallback=True))):
+        step = make_distributed_step(mesh, dcfg, cfg)
+        s = state0
+        for _ in range(3):
+            s = step(s)
+        finals[name] = np.asarray(s.pool.position)
+    np.testing.assert_allclose(finals["dense"], finals["fused_fb"], atol=0.0)
+    print("fused overflow fallback OK")
+
+
+def scenario_telemetry():
+    """§6.2.2/§6.2.3 observability: DistState carries exact cumulative wire
+    bytes (incl. ceil-rounded bitmask sizes, the //8→0 truncation fix) and
+    the halo_overflow counter trips when halo_capacity is undersized."""
+    extent, halo = 16.0, 2.0
+    mesh = _mesh((4, 2), ("data", "model"))
+    h = 4  # tiny: bitmasks are sub-byte (ceil → 1), capacity overflows
+    dcfg = DomainConfig(
+        mesh_axes=("data", "model"),
+        axis_sizes=(4, 2),
+        extent=extent,
+        halo_width=halo,
+        halo_capacity=h,
+        migrate_capacity=48,
+        depth=16.0,
+        halo_codec="int16",
+    )
+    spec = dcfg.grid_spec(box_size=2.0, max_per_cell=32)
+    ecfg = EngineConfig(
+        spec=spec, behaviors=(), force_params=ForceParams(), dt=0.05,
+        min_bound=0.0, max_bound=extent, boundary="open", sort_frequency=4,
+    )
+    rng = np.random.default_rng(42)
+    pos = rng.uniform(2.0, [4 * extent - 2.0, 2 * extent - 2.0, 14.0], (500, 3))
+    state = init_dist_state(dcfg, capacity=192, positions=pos.astype(np.float32),
+                            diameter=1.6)
+    step = make_distributed_step(mesh, dcfg, ecfg)
+    n_steps = 5
+    for _ in range(n_steps):
+        state = step(state)
+
+    # int16 channel: q 2B×3, rad f32, kind i8, fresh/valid 1-bit → ceil 1 B.
+    per_channel = h * 3 * 2 + (h + 7) // 8 + h * 4 + h + (h + 7) // 8
+    per_channel_base = h * 3 * 4 + h * 4 + h * 4 + (h + 7) // 8
+    channels = dcfg.n_decomposed * 2
+    payload = np.asarray(state.halo_payload_bytes)
+    baseline = np.asarray(state.halo_baseline_bytes)
+    assert (payload == n_steps * channels * per_channel).all(), payload
+    assert (baseline == n_steps * channels * per_channel_base).all(), baseline
+    stats = halo_wire_stats(state)
+    assert stats["compression_ratio"] > 1.0, stats
+    assert int(np.asarray(state.halo_overflow).sum()) > 0  # h=4 is undersized
+    print(f"wire stats: {stats}")
+    print("telemetry OK")
+
+
+def scenario_packing_no_sort():
+    """The migrate/halo packing hot path must lower with ZERO sort ops —
+    selection and insertion are cumsum-rank compaction scatters now.  The
+    full step keeps its (intentional) sorts: §5.4.2 agent sorting and the
+    grid build; that positive control also proves the detector sees sorts."""
+    from repro.core.distributed import hlo_sort_count, make_packing_program
+
+    mesh, dcfg, ecfg, pos, n = _force_only_setup("int16")
+    state = init_dist_state(dcfg, capacity=192, positions=pos, diameter=1.6)
+
+    packing_hlo = make_packing_program(mesh, dcfg).lower(state).as_text()
+    n_packing = hlo_sort_count(packing_hlo)
+
+    step_hlo = make_distributed_step(mesh, dcfg, ecfg).lower(state).as_text()
+    n_step = hlo_sort_count(step_hlo)
+
+    print(f"sort ops: packing={n_packing}, full step={n_step}")
+    assert n_step > 0, "detector broken: grid-build sort not seen in full step"
+    assert n_packing == 0, f"{n_packing} sort ops left in migrate/halo packing"
+    print("packing sort-free OK")
+
+
+def scenario_lazy_candidates():
+    """Neighbor-dataflow audit for the distributed step (the distributed
+    sibling of tests/test_engine.py's candidate-count regressions): the
+    dense (C, 27M) candidate tensor is built exactly once on the dense
+    path, once (inside the lax.cond fallback branch) with the fused
+    fallback, and NEVER on the pure fused path."""
+    import repro.core.neighbors as nb
+
+    real = nb.candidate_neighbors_arrays
+    calls = {"n": 0}
+
+    def counted(*a, **k):
+        calls["n"] += 1
+        return real(*a, **k)
+
+    mesh, dcfg, ecfg, pos, n = _force_only_setup("int16")
+    state = init_dist_state(dcfg, capacity=192, positions=pos, diameter=1.6)
+    nb.candidate_neighbors_arrays = counted
+    try:
+        counts = {}
+        for name, cfg in (
+            ("fused", _fused_ecfg(ecfg)),
+            ("fused_fallback", _fused_ecfg(ecfg, fallback=True)),
+            ("dense", ecfg),
+        ):
+            calls["n"] = 0
+            make_distributed_step(mesh, dcfg, cfg).lower(state)
+            counts[name] = calls["n"]
+    finally:
+        nb.candidate_neighbors_arrays = real
+    print("candidate builds per step trace:", counts)
+    assert counts["fused"] == 0, counts
+    assert counts["fused_fallback"] == 1, counts
+    assert counts["dense"] == 1, counts
+    print("lazy candidates OK")
+
+
 def scenario_multipod():
     """3D decomposition over a (2, 2, 2) mesh with a 'pod' axis."""
     mesh = _mesh((2, 2, 2), ("pod", "data", "model"))
@@ -212,6 +450,12 @@ if __name__ == "__main__":
         "parity_none": lambda: scenario_parity_simple("none"),
         "codec": scenario_codec_reduction,
         "multipod": scenario_multipod,
+        "fused_parity": scenario_fused_parity,
+        "fused_dead": scenario_fused_dead_agents,
+        "fused_overflow": scenario_fused_overflow_fallback,
+        "telemetry": scenario_telemetry,
+        "packing_no_sort": scenario_packing_no_sort,
+        "lazy_candidates": scenario_lazy_candidates,
     }
     if which == "all":
         for name, fn in table.items():

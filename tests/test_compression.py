@@ -46,9 +46,10 @@ def body(x, e):
     true = x * jnp.float32((1+2+3+4+5+6+7+8) / 8.0)
     return out, ne, true
 
-from jax import shard_map
+# jax-version-compat shard_map (check_vma/check_rep gated automatically)
+from repro.core.distributed import shard_map
 fn = jax.jit(shard_map(body, mesh=mesh, in_specs=(P(), P()),
-                       out_specs=(P(), P(), P()), check_vma=False))
+                       out_specs=(P(), P(), P())))
 x = jnp.asarray(rng.normal(0, 1, (256,)), jnp.float32)
 e = jnp.zeros((256,), jnp.float32)
 errs = []

@@ -56,3 +56,91 @@ def test_delta_codec_physics_bound():
 def test_multipod_3d_decomposition():
     out = _run("multipod")
     assert "multipod OK" in out
+
+
+@pytest.mark.subprocess
+@pytest.mark.slow
+def test_fused_force_parity_distributed():
+    """DESIGN.md §4 distributed adoption: the fused cell-list force pass over
+    the ghost-extended grid (corner-halo agents included) must match both the
+    dense distributed path and the single-node fused engine."""
+    out = _run("fused_parity")
+    assert "fused parity OK" in out
+
+
+@pytest.mark.subprocess
+def test_fused_dead_agents_distributed():
+    out = _run("fused_dead")
+    assert "fused dead agents OK" in out
+
+
+@pytest.mark.subprocess
+def test_fused_overflow_falls_back_distributed():
+    """Halo-extended cell-list overflow → lax.cond dense fallback, exactly."""
+    out = _run("fused_overflow")
+    assert "fused overflow fallback OK" in out
+
+
+@pytest.mark.subprocess
+def test_halo_wire_telemetry():
+    """DistState carries exact cumulative payload/baseline wire bytes."""
+    out = _run("telemetry")
+    assert "telemetry OK" in out
+
+
+@pytest.mark.subprocess
+def test_packing_is_sort_free():
+    """migrate/halo_exchange packing lowers with zero sort ops."""
+    out = _run("packing_no_sort")
+    assert "packing sort-free OK" in out
+
+
+@pytest.mark.subprocess
+def test_distributed_candidates_lazy():
+    """Fused distributed step never materializes the (C, 27M) tensor."""
+    out = _run("lazy_candidates")
+    assert "lazy candidates OK" in out
+
+
+# ---------------------------------------------------------------------------
+# In-process unit tests (no devices needed): the sort-free packing primitives.
+# ---------------------------------------------------------------------------
+
+
+def test_select_matches_stable_argsort_reference():
+    """_select's cumsum-rank compaction must reproduce the stable-argsort
+    semantics it replaced: selected ids in ascending index order, exact
+    valid prefix, exact overflow count."""
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core.distributed import _select
+
+    rng = np.random.default_rng(0)
+    for case in range(20):
+        c = int(rng.integers(1, 200))
+        capacity = int(rng.integers(1, 32))
+        mask = rng.random(c) < rng.random()
+        ids, valid, overflow = _select(jnp.asarray(mask), capacity)
+        ids, valid = np.asarray(ids), np.asarray(valid)
+        expected = np.nonzero(mask)[0]
+        n = len(expected)
+        k = min(n, capacity)
+        np.testing.assert_array_equal(ids[:k], expected[:k], err_msg=str(case))
+        np.testing.assert_array_equal(valid, np.arange(capacity) < k)
+        assert int(overflow) == max(n - capacity, 0)
+
+
+def test_free_slot_table_matches_sort_reference():
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core.agents import free_slot_table
+
+    rng = np.random.default_rng(1)
+    for _ in range(10):
+        c = int(rng.integers(1, 150))
+        alive = rng.random(c) < 0.6
+        got = np.asarray(free_slot_table(jnp.asarray(alive)))
+        ref = np.sort(np.where(~alive, np.arange(c), c))
+        np.testing.assert_array_equal(got, ref)
