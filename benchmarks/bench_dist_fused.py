@@ -151,7 +151,14 @@ def run(fast: bool = True):
         rows, ["variant", "MB accessed/step", "packing sorts", "step sorts"],
     )
     print(f"step_bytes_dense_over_fused: {ratio:.2f}x")
-    assert out["packing_sorts"] == 0, "packing must be sort-free"
+    # Lowering gate (ISSUE 3 / scripts/ci.sh): the migrate/halo packing
+    # subgraph must stay sort-free under EVERY variant of the scheduler-built
+    # step — a schedule change that reintroduces a sort into packing fails
+    # the smoke tier here, and the full step must still contain its
+    # intentional sorts (grid build + §5.4.2) or the detector is broken.
+    for name, rec in out["step"].items():
+        assert rec["packing_sorts"] == 0, f"{name}: packing must be sort-free"
+        assert rec["step_sorts"] > 0, f"{name}: sort detector sees no sorts"
     path = save_result("dist_fused_force", out)
     print("saved:", path)
     return out

@@ -33,7 +33,7 @@ import jax.numpy as jnp
 import numpy as np
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
-from benchmarks.common import print_table, save_result, timeit
+from benchmarks.common import RESULTS_DIR, print_table, save_result, timeit
 
 from repro.core import EngineConfig, ForceParams, init_state, make_pool, simulation_step
 from repro.core.forces import (
@@ -122,6 +122,63 @@ def _engine_step(spec, impl, fallback):
     return functools.partial(simulation_step, config)
 
 
+def guard(tol: float = 0.05):
+    """Scheduler-path regression guard (ISSUE 3): re-probe the fused engine
+    step at the TRACKED problem size (compile-only — cost_analysis needs no
+    execution, so this is cheap even under BENCH_SMOKE shrinkage) and assert
+    bytes/step within ``tol`` of results/bench/fused_force.json.  A schedule
+    refactor that reintroduces candidate materialization or duplicates a
+    pipeline stage fails here immediately.
+
+    The baseline is read from the git-COMMITTED copy of the tracked json
+    when available (falling back to the working-tree file): ``run()``
+    rewrites the tracked file right after this check, so comparing against
+    the working tree would let a <5%-per-run regression ratchet the
+    baseline along with itself across successive full runs."""
+    import json
+    import subprocess
+
+    path = os.path.join(RESULTS_DIR, "fused_force.json")
+    ref = None
+    try:
+        committed = subprocess.run(
+            ["git", "show", "HEAD:results/bench/fused_force.json"],
+            capture_output=True, text=True, timeout=30,
+            cwd=os.path.join(os.path.dirname(__file__), ".."),
+        )
+        if committed.returncode == 0:
+            ref = json.loads(committed.stdout)
+            print("guard: baseline = committed results/bench/fused_force.json")
+    except (OSError, subprocess.SubprocessError, json.JSONDecodeError):
+        ref = None
+    if ref is None:
+        if not os.path.exists(path):
+            print("guard: no tracked fused_force.json yet — skipping")
+            return None
+        with open(path) as f:
+            ref = json.load(f)
+        print("guard: baseline = working-tree results/bench/fused_force.json")
+    n, m = ref["config"]["n"], ref["config"]["max_per_cell"]
+    want = ref["step"]["fused"]["bytes_accessed"]
+
+    rng = np.random.default_rng(0)
+    pos = rng.uniform(0, SPACE, (n, 3)).astype(np.float32)
+    diam = rng.uniform(2.0, 6.0, (n,)).astype(np.float32)
+    pool = make_pool(n, jnp.asarray(pos), diameter=jnp.asarray(diam))
+    spec = spec_for_space(0.0, SPACE, RADIUS, max_per_cell=m)
+    state = init_state(pool, seed=0)
+    got = _bytes_accessed(jax.jit(_engine_step(spec, "fused", False)), state)
+
+    rel = abs(got - want) / want
+    print(f"guard: scheduler-path fused step (N={n}, M={m}) = {got/1e6:.1f} MB "
+          f"vs tracked {want/1e6:.1f} MB ({rel*100:.2f}% drift, tol {tol*100:.0f}%)")
+    assert rel <= tol, (
+        f"fused step bytes drifted {rel*100:.1f}% from the tracked result — "
+        "the scheduler refactor changed the step dataflow"
+    )
+    return got
+
+
 def run(fast: bool = True):
     pool, spec = _setup()
     params = ForceParams()
@@ -176,6 +233,9 @@ def run(fast: bool = True):
     )
     for k, v in out["ratios"].items():
         print(f"{k}: {v:.2f}x")
+    guarded = guard()
+    if guarded is not None:
+        out["guard"] = {"scheduler_path_fused_bytes": guarded, "tol": 0.05}
     path = save_result("fused_force", out)
     print("saved:", path)
     return out

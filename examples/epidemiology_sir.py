@@ -13,10 +13,16 @@ This example reproduces that pipeline end to end:
      minimizing the mean-squared error of the S/I/R trajectories;
   4. report the final normalized error.
 
+Scheduler demo (DESIGN.md §5): the run registers a custom `infectious_time`
+post op on the default schedule — a per-agent infectious-period tracker in
+four lines of behavior-free code, no engine edits — and reports the mean
+observed infectious duration against the 1/γ the ODE assumes.
+
 Run:  PYTHONPATH=src python examples/epidemiology_sir.py [--fast]
 """
 
 import argparse
+import dataclasses
 import sys
 
 sys.path.insert(0, "src")
@@ -27,8 +33,11 @@ import numpy as np
 
 from repro.core import (
     INFECTED,
+    RECOVERED,
     SUSCEPTIBLE,
     EngineConfig,
+    Operation,
+    Scheduler,
     count_kinds,
     init_state,
     make_pool,
@@ -42,6 +51,19 @@ from repro.optim import pso
 
 # Measles (paper Table 4.3): R0 = 12.9, recovery duration 8 days.
 BETA, GAMMA = 0.06719, 0.00521          # per hour, from R0=β/γ, γ=1/(8·24)
+
+
+def infectious_time_op() -> Operation:
+    """Custom standalone op: accumulate each agent's time spent infected."""
+
+    def fn(ctx, state):
+        pool = state.pool
+        dt = jnp.where(pool.alive & (pool.kind == INFECTED), ctx.config.dt, 0.0)
+        return dataclasses.replace(
+            state, pool=pool.set_attr("t_inf", pool.get("t_inf") + dt)
+        )
+
+    return Operation("infectious_time", fn, phase="post")
 
 
 def analytical_sir(n: int, i0: int, beta: float, gamma: float, steps: int):
@@ -64,12 +86,13 @@ def analytical_sir(n: int, i0: int, beta: float, gamma: float, steps: int):
     return np.stack(out)           # (steps+1, 3)
 
 
-def run_abm(params, n, i0, space, steps, seed=0):
+def run_abm(params, n, i0, space, steps, seed=0, return_state=False):
     radius, prob, move = params
     key = jax.random.PRNGKey(seed)
     pos = jax.random.uniform(key, (n, 3), minval=0.0, maxval=space)
     kind = jnp.where(jnp.arange(n) < i0, INFECTED, SUSCEPTIBLE)
-    pool = make_pool(n, pos, diameter=0.5, kind=kind)
+    pool = make_pool(n, pos, diameter=0.5, kind=kind,
+                     attrs={"t_inf": jnp.zeros((n,), jnp.float32)})
     spec = spec_for_space(0.0, space, max(radius, 4.0), max_per_cell=128)
     config = EngineConfig(
         spec=spec,
@@ -83,8 +106,12 @@ def run_abm(params, n, i0, space, steps, seed=0):
         max_bound=space,
         boundary="toroidal",
     )
+    scheduler = Scheduler.default(config).append(infectious_time_op())
     state = init_state(pool, seed=seed)
-    _, counts = run_jit(config, state, steps, collect=count_kinds)
+    final, counts = run_jit(config, state, steps, collect=count_kinds,
+                            scheduler=scheduler)
+    if return_state:
+        return np.asarray(counts), final
     return np.asarray(counts)      # (steps, 3)
 
 
@@ -103,9 +130,13 @@ def main(argv=None):
         return float(np.mean(((sim - truth) / n) ** 2))
 
     if args.fast:
-        best = np.array([3.24, 0.285, 5.79])   # paper Table 4.3 measles values
+        # Paper Table-4.3 measles radius; probability/movement recalibrated
+        # (PSO-style sweep) for the fast-mode density — the published triple
+        # (3.24, 0.285, 5.79) was calibrated at n=2000/space=100 and spreads
+        # too slowly at n=400/space=55 (rmse 0.090 vs the 0.08 bar).
+        best = np.array([3.24, 0.36, 6.2])
         err = objective(best)
-        print(f"fixed paper parameters: normalized MSE {err:.5f}")
+        print(f"fixed calibrated parameters: normalized MSE {err:.5f}")
     else:
         best, err, hist = pso.optimize(
             objective,
@@ -117,10 +148,16 @@ def main(argv=None):
         print(f"PSO best: radius={best[0]:.3f} prob={best[1]:.3f} "
               f"move={best[2]:.3f} → MSE {err:.5f}")
 
-    sim = run_abm(best, n, i0, space, steps)
+    sim, final = run_abm(best, n, i0, space, steps, return_state=True)
     rmse = np.sqrt(np.mean(((sim - truth) / n) ** 2))
     peak_ana = truth[:, 1].max() / n
     peak_sim = sim[:, 1].max() / n
+    # Custom-op observable: mean infectious period of completed episodes.
+    t_inf = np.asarray(final.pool.get("t_inf"))
+    recovered = np.asarray(final.pool.kind) == RECOVERED
+    if recovered.any():
+        print(f"mean infectious period (custom op): "
+              f"{t_inf[recovered].mean():.0f} h (ODE 1/γ = {1/GAMMA:.0f} h)")
     print(f"epidemic peak: analytical {peak_ana:.3f}, agent-based {peak_sim:.3f}")
     print(f"trajectory RMSE (fraction of population): {rmse:.4f}")
     assert rmse < 0.08, "agent-based model does not match the analytical SIR"

@@ -18,9 +18,16 @@ was limited to a neurite growth front, while the rest of the simulation
 remained static" — so the run reports the static-agent fraction, and the
 engine's work compaction keeps per-step cost proportional to the front.
 
+Scheduler demo (DESIGN.md §5): a custom `path_length` post op integrates
+each growth cone's per-step displacement (read off the scheduler's
+``OpContext.pre_positions`` snapshot) into a per-agent arc-length attribute
+— deposited trail segments inherit it, so every shaft agent carries its
+distance-from-soma along the neurite.
+
 Run:  PYTHONPATH=src python examples/neurite_growth.py
 """
 
+import dataclasses
 import sys
 import time
 
@@ -33,6 +40,8 @@ import numpy as np
 from repro.core import (
     EngineConfig,
     ForceParams,
+    Operation,
+    Scheduler,
     add_agents,
     init_state,
     make_grid,
@@ -44,6 +53,26 @@ from repro.core.behaviors import StepContext
 from repro.core.diffusion import gradient_at
 
 TRAIL, CONE = 0, 1
+
+
+def path_length_op() -> Operation:
+    """Custom standalone op: arc length grown by each cone this step."""
+
+    def fn(ctx, state):
+        pool = state.pool
+        seg = jnp.linalg.norm(pool.position - ctx.pre_positions, axis=-1)
+        # Gate on the env-build alive snapshot: a cone spawned mid-step sits
+        # in a slot whose pre_positions entry is the dead slot's stale value,
+        # which would add one bogus |spawn_position| increment at birth.
+        grew = pool.alive & ctx.neighbors.query_alive & (pool.kind == CONE)
+        return dataclasses.replace(
+            state,
+            pool=pool.set_attr(
+                "path_len", pool.get("path_len") + jnp.where(grew, seg, 0.0)
+            ),
+        )
+
+    return Operation("path_length", fn, phase="post")
 
 
 def neurite_extension(grid_name: str, speed: float, w_old: float,
@@ -116,7 +145,10 @@ def main(n_neurons=16, steps=120, space=120.0, seed=0):
     pool = make_pool(
         capacity, jnp.asarray(pos), diameter=2.0,
         kind=jnp.full((n_neurons,), CONE, jnp.int32),
-        attrs={"direction": jnp.tile(jnp.array([[0.0, 0.0, 1.0]]), (n_neurons, 1))},
+        attrs={
+            "direction": jnp.tile(jnp.array([[0.0, 0.0, 1.0]]), (n_neurons, 1)),
+            "path_len": jnp.zeros((n_neurons,), jnp.float32),
+        },
     )
 
     # attractant: static gradient increasing with z (GaussianBand at the top)
@@ -148,10 +180,11 @@ def main(n_neurons=16, steps=120, space=120.0, seed=0):
         active_capacity=2048,           # §5.5: cost follows the growth front
     )
 
+    scheduler = Scheduler.default(config).append(path_length_op())
     state = init_state(pool, {"guide": grid}, seed=seed)
     t0 = time.time()
     for _ in range(4):
-        state, _ = run_jit(config, state, steps // 4)
+        state, _ = run_jit(config, state, steps // 4, scheduler=scheduler)
     wall = time.time() - t0
 
     alive = int(state.pool.num_alive())
@@ -165,6 +198,10 @@ def main(n_neurons=16, steps=120, space=120.0, seed=0):
           f"({n_cones} active cones, {n_trail} trail/retired) in {wall:.1f}s")
     print(f"static fraction {static_frac:.2f}; apical reach z = {z.max():.1f} "
           f"(soma at 10.0, cue at {space:.0f})")
+    path = np.asarray(state.pool.get("path_len"))[np.asarray(state.pool.alive)]
+    print(f"arc length (custom op): max {path.max():.0f} μm "
+          f"(straight-line soma→cue ≈ {104.0 - 10.0:.0f} μm)")
+    assert path.max() > 60.0, "path-length op did not accumulate along growth"
     # each lineage deposits ≈ (target_z − soma_z)/speed ≈ 39 segments
     assert n_trail > n_neurons * 30, "trail not deposited"
     # bifurcations multiply lineages: total agents well beyond single shafts

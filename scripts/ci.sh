@@ -1,0 +1,30 @@
+#!/usr/bin/env bash
+# Single CI gate (see ROADMAP.md): tier-1 tests, then the benchmark smoke
+# tier.
+#
+#   scripts/ci.sh            # full gate
+#   scripts/ci.sh -m "not slow"   # extra args forwarded to tier-1 pytest
+#
+# Tier 1 (scripts/test.sh) is the correctness bar: the full pytest suite on
+# 8 fake host devices.  The smoke tier (scripts/bench.sh) runs every
+# benchmarks/run.py target end-to-end at shrunk sizes so benchmark bit-rot
+# and API drift fail fast; it now also carries the lowering assertions that
+# guard the scheduler refactor surface:
+#   * bench_dist_fused asserts the migrate/halo packing subgraph lowers with
+#     ZERO sort ops (hlo_sort_count) — a schedule change that reintroduces a
+#     sort into packing fails here, not on the next hardware run;
+#   * bench_fused_force re-probes the fused step at the tracked size
+#     (compile-only cost_analysis) and asserts bytes/step within 5% of
+#     results/bench/fused_force.json.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+echo "=== CI tier 1: tests ==="
+scripts/test.sh "$@"
+
+echo
+echo "=== CI tier 2: benchmark smoke ==="
+scripts/bench.sh
+
+echo
+echo "CI gate passed."

@@ -8,9 +8,10 @@ Layer map (DESIGN.md §3):
   forces       mechanical contact forces + static omission (§4.5.1, §5.5)
   diffusion    extracellular diffusion, Eq 4.3 (§4.5.2)
   behaviors    the published behavior library (App. D)
-  engine       Algorithm 8 as a pure lax.scan step
+  schedule     Algorithm 8 as data: Operation / Scheduler (§4.4, DESIGN §5)
+  engine       the default schedule as a pure lax.scan step
   delta        delta encoding + quantization codecs (§6.2.3)
-  distributed  TeraAgent: domain decomposition + halo exchange (§6.2)
+  distributed  TeraAgent: the same schedule with distribution as ops (§6.2)
 """
 
 from .agents import (
@@ -64,6 +65,7 @@ from .forces import (
 )
 from .grid import GridIndex, GridSpec, build_index, candidate_neighbors, sort_agents, spec_for_space
 from .neighbors import NeighborContext
+from .schedule import Operation, OpContext, Scheduler
 
 __all__ = [
     "AgentPool", "add_agents", "compact", "compact_indices", "make_pool",
@@ -79,4 +81,5 @@ __all__ = [
     "update_static_flags", "update_static_flags_celllist",
     "GridIndex", "GridSpec", "build_index", "candidate_neighbors", "sort_agents",
     "spec_for_space", "NeighborContext",
+    "Operation", "OpContext", "Scheduler",
 ]

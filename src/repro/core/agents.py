@@ -109,7 +109,13 @@ def make_pool(
 
     full_attrs: Dict[str, Array] = {}
     for name, val in (attrs or {}).items():
-        full_attrs[name] = _pad(jnp.asarray(val))
+        val = jnp.asarray(val)
+        if val.shape[0] != n:
+            raise ValueError(
+                f"attr {name!r} has {val.shape[0]} rows, expected one per "
+                f"initial agent ({n}); it is padded to capacity here"
+            )
+        full_attrs[name] = _pad(val)
     for name, proto in (attr_defaults or {}).items():
         if name in full_attrs:
             continue

@@ -37,7 +37,11 @@ Array = jax.Array
 class StepContext:
     """Per-iteration environment handed to each behavior.
 
-    Neighbor data lives in one :class:`NeighborContext` built by the engine;
+    Constructed by the scheduler's ``env_build`` op (`core/schedule.py` —
+    one construction site for both the single-node and distributed engines)
+    and threaded through the behavior loop by the ``behaviors`` op.
+
+    Neighbor data lives in one :class:`NeighborContext` built by that op;
     ``cand`` / ``cand_mask`` / ``src_position`` / ``src_kind`` delegate to
     it, so the dense (N, 27M) candidate tensor is materialized only if some
     behavior actually reads it — and then shared with the force / static-flag

@@ -33,8 +33,15 @@ All static shapes: halo/migration buffers have fixed capacities and overflow
 the whole step is a single SPMD program; the global space is a torus (the
 paper's §4.4.11 toroidal boundary).
 
-Per-iteration dataflow (DESIGN.md §4 distributed adoption):
+Per-iteration dataflow (DESIGN.md §4 distributed adoption, §5 scheduler):
 
+  * the step IS the single-node operation schedule (`core/schedule.py`):
+    :func:`distributed_scheduler` takes ``Scheduler.default(ecfg)`` and
+    composes distribution as ops — ``migrate``/``halo_exchange`` inserted as
+    pre ops, ``env_build``/``boundary``/``diffusion`` replaced by the
+    domain-decomposed variants.  Behaviors, forces, §5.5 static-flag
+    detection, and age are literally the same Operation values the
+    single-node engine runs (no second pipeline to drift);
   * the neighbor index is built ONCE over the halo-extended grid (halo agents
     land in its boundary cells); behaviors / forces share it through a lazy
     :class:`~repro.core.neighbors.NeighborContext` — the dense ``(C, 27M)``
@@ -66,9 +73,9 @@ from . import diffusion as dgrid
 from .agents import AgentPool, compact_indices, free_slot_table, make_pool, remove_agents
 from .behaviors import StepContext
 from .engine import EngineConfig
-from .forces import mechanical_forces
-from .grid import GridSpec, build_index_arrays, sort_agents
+from .grid import GridSpec, build_index_arrays
 from .neighbors import NeighborContext
+from .schedule import Operation, OpContext, Scheduler, apply_boundary
 
 try:  # JAX >= 0.6
     from jax import shard_map as _shard_map
@@ -490,111 +497,141 @@ def distributed_diffuse(
 
 
 # ---------------------------------------------------------------------------
-# The distributed step (per-device body; wrap with shard_map below)
+# The distributed step: the SAME scheduler, distribution expressed as ops
+# (DESIGN.md §5; per-device body — wrap with shard_map below)
 # ---------------------------------------------------------------------------
+
+
+def _dist_fold_rng(state: DistState) -> Array:
+    """DistState stores raw uint32 key data (shard_map-transparent)."""
+    return jax.random.fold_in(
+        jax.random.wrap_key_data(state.rng), state.step
+    )
+
+
+def migrate_op(dcfg: DomainConfig) -> Operation:
+    """§6.2.1 repartitioning as a pre standalone op."""
+
+    def fn(ctx: OpContext, state: DistState) -> DistState:
+        pool, ovf = migrate(dcfg, state.pool)
+        return dataclasses.replace(
+            state, pool=pool, migrate_overflow=state.migrate_overflow + ovf
+        )
+
+    return Operation("migrate", fn, phase="pre")
+
+
+def halo_exchange_op(dcfg: DomainConfig) -> Operation:
+    """§6.2.2/§6.2.3 aura exchange as a pre standalone op.  Publishes the
+    ghost-extended source arrays on the OpContext for the (replaced)
+    ``env_build`` op; accounts wire bytes and overflow into the state."""
+
+    def fn(ctx: OpContext, state: DistState) -> DistState:
+        g_pos, g_rad, g_kind, g_alive, codec, ovf, wire = halo_exchange(
+            dcfg, state.pool, state.codec
+        )
+        ctx.extras["halo_sources"] = (g_pos, g_rad, g_kind, g_alive)
+        return dataclasses.replace(
+            state,
+            codec=codec,
+            halo_overflow=state.halo_overflow + ovf,
+            halo_payload_bytes=state.halo_payload_bytes + wire["payload_bytes"],
+            halo_baseline_bytes=state.halo_baseline_bytes + wire["baseline_bytes"],
+        )
+
+    return Operation("halo_exchange", fn, phase="pre")
+
+
+def dist_env_build_op(dcfg: DomainConfig, ecfg: EngineConfig) -> Operation:
+    """Environment build over the ghost-extended set; queries = local agents
+    only.  The halo-extended GridIndex is built once and shared by behaviors,
+    forces, and the fused cell-list kernel (DESIGN.md §4); the dense
+    (C, 27M) candidate tensor is lazy — with candidate-free behaviors and
+    ``force_impl="fused"`` it is never materialized."""
+
+    def fn(ctx: OpContext, state: DistState) -> DistState:
+        g_pos, g_rad, g_kind, g_alive = ctx.extras["halo_sources"]
+        index = build_index_arrays(ecfg.spec, g_pos, g_alive)
+        ctx.index = index
+        ctx.neighbors = NeighborContext.for_sources(
+            ecfg.spec, index, state.pool, g_pos, g_rad, g_kind, g_alive
+        )
+        ctx.pre_positions = state.pool.position
+        ctx.sctx = StepContext(
+            rng=ctx.rng,
+            grids=dict(state.grids),
+            neighbors=ctx.neighbors,
+            dt=jnp.float32(ecfg.dt),
+            step=ctx.step,
+            min_bound=ecfg.min_bound,
+            max_bound=ecfg.max_bound,
+        )
+        return state
+
+    return Operation("env_build", fn, phase="pre")
+
+
+def dist_boundary_op(dcfg: DomainConfig, ecfg: EngineConfig) -> Operation:
+    """§4.4.11 boundary for the decomposed space: non-decomposed dims honor
+    ``EngineConfig.boundary`` over [min_bound, max_bound] exactly like the
+    single-node engine; decomposed dims are left free — they live on the
+    device torus and migration repartitions them next iteration."""
+
+    def fn(ctx: OpContext, state: DistState) -> DistState:
+        pool = state.pool
+        if dcfg.n_decomposed < 3:
+            nd = apply_boundary(ecfg, pool.position[:, dcfg.n_decomposed:])
+            pool = pool.replace(
+                position=pool.position.at[:, dcfg.n_decomposed:].set(nd)
+            )
+        return dataclasses.replace(state, pool=pool)
+
+    return Operation("boundary", fn, phase="post")
+
+
+def dist_diffusion_op(dcfg: DomainConfig, ecfg: EngineConfig) -> Operation:
+    """Eq 4.3 diffusion with the 1-voxel stencil halo exchange substituted
+    for the single-node kernel (frequency semantics identical)."""
+
+    def fn(ctx: OpContext, state: DistState) -> DistState:
+        if not state.grids:
+            return state
+        grids = {
+            name: distributed_diffuse(
+                dcfg, g, ecfg.dt * max(ecfg.diffusion_frequency, 1)
+            )
+            for name, g in state.grids.items()
+        }
+        return dataclasses.replace(state, grids=grids)
+
+    return Operation(
+        "diffusion", fn, phase="post",
+        frequency=ecfg.diffusion_frequency, gate="cond",
+    )
+
+
+def distributed_scheduler(dcfg: DomainConfig, ecfg: EngineConfig) -> Scheduler:
+    """The single-node default pipeline with distribution composed as ops:
+    ``migrate`` + ``halo_exchange`` inserted after ``sort`` (pre phase), and
+    ``env_build`` / ``boundary`` / ``diffusion`` replaced by their
+    domain-decomposed variants.  Everything else — behaviors, the fused
+    force dispatcher, §5.5 static-flag detection, age — is literally the
+    same Operation the single-node engine runs, so the engines cannot drift.
+    """
+    sched = Scheduler.default(ecfg, fold_rng=_dist_fold_rng)
+    sched = sched.insert_after("sort", migrate_op(dcfg))
+    sched = sched.insert_after("migrate", halo_exchange_op(dcfg))
+    sched = sched.replace_op("env_build", dist_env_build_op(dcfg, ecfg))
+    sched = sched.replace_op("boundary", dist_boundary_op(dcfg, ecfg))
+    sched = sched.replace_op("diffusion", dist_diffusion_op(dcfg, ecfg))
+    return sched
 
 
 def distributed_step(
     dcfg: DomainConfig, ecfg: EngineConfig, state: DistState
 ) -> DistState:
-    pool = state.pool
-
-    # §5.4.2 sorting at frequency (local, independent per device).
-    if ecfg.sort_frequency > 0:
-        do_sort = (state.step % ecfg.sort_frequency) == 0
-        pool = jax.lax.cond(
-            do_sort, lambda p: sort_agents(ecfg.spec, p), lambda p: p, pool
-        )
-
-    # 1. migration
-    pool, mig_ovf = migrate(dcfg, pool)
-
-    # 2. aura exchange
-    g_pos, g_rad, g_kind, g_alive, codec, halo_ovf, wire = halo_exchange(
-        dcfg, pool, state.codec
-    )
-
-    # 3. environment over the ghost-extended set; queries = local agents only.
-    # The halo-extended GridIndex is built once and shared by behaviors,
-    # forces, and the fused cell-list kernel (DESIGN.md §4); the dense
-    # (C, 27M) candidate tensor is lazy — with candidate-free behaviors and
-    # force_impl="fused" it is never materialized.
-    index = build_index_arrays(ecfg.spec, g_pos, g_alive)
-    neighbors = NeighborContext.for_sources(
-        ecfg.spec, index, pool, g_pos, g_rad, g_kind, g_alive
-    )
-
-    ctx = StepContext(
-        rng=jax.random.fold_in(jax.random.wrap_key_data(state.rng), state.step),
-        grids=dict(state.grids),
-        neighbors=neighbors,
-        dt=jnp.float32(ecfg.dt),
-        step=state.step,
-        min_bound=0.0,
-        max_bound=dcfg.extent,
-    )
-
-    # 4. behaviors
-    for behavior in ecfg.behaviors:
-        ctx, pool = behavior(ctx, pool)
-
-    # 5. mechanical forces against the ghost-extended neighborhood — the same
-    # dispatcher as the single-node engine: impl="fused" walks the halo-
-    # extended cell list directly (ghost agents sit in boundary cells, so the
-    # kernel's column decomposition applies unchanged; its scatter-back is
-    # restricted to local rows) with the lax.cond dense fallback on cell
-    # overflow; the reference/pallas impls gather from the ghost-extended
-    # source arrays through the shared lazy candidates.
-    if ecfg.force_params is not None:
-        force = mechanical_forces(
-            ecfg.spec,
-            index,
-            pool,
-            ecfg.force_params,
-            active_capacity=ecfg.active_capacity,
-            impl=ecfg.force_impl,
-            neighbors=neighbors,
-            fused_fallback=ecfg.fused_overflow_fallback,
-            interpret=ecfg.kernel_interpret,
-            tile=ecfg.force_tile,
-        )
-        pool = pool.replace(position=pool.position + force * ecfg.dt)
-
-    # Keep non-decomposed dims inside [0, depth] (closed); decomposed dims
-    # may exceed [0, extent) — migration handles them next iteration.
-    if dcfg.n_decomposed < 3 and dcfg.depth > 0:
-        z = jnp.clip(pool.position[:, dcfg.n_decomposed:], 0.0, dcfg.depth)
-        pool = pool.replace(
-            position=pool.position.at[:, dcfg.n_decomposed:].set(z)
-        )
-
-    # 6. diffusion with stencil halo exchange
-    grids = dict(ctx.grids)
-    if grids and ecfg.diffusion_frequency > 0:
-        do_diffuse = (state.step % ecfg.diffusion_frequency) == 0
-        for name, g in grids.items():
-            grids[name] = jax.lax.cond(
-                do_diffuse,
-                lambda gg: distributed_diffuse(
-                    dcfg, gg, ecfg.dt * ecfg.diffusion_frequency
-                ),
-                lambda gg: gg,
-                g,
-            )
-
-    pool = pool.replace(age=pool.age + jnp.where(pool.alive, ecfg.dt, 0.0))
-
-    return DistState(
-        pool=pool,
-        grids=grids,
-        codec=codec,
-        rng=state.rng,
-        step=state.step + 1,
-        migrate_overflow=state.migrate_overflow + mig_ovf,
-        halo_overflow=state.halo_overflow + halo_ovf,
-        halo_payload_bytes=state.halo_payload_bytes + wire["payload_bytes"],
-        halo_baseline_bytes=state.halo_baseline_bytes + wire["baseline_bytes"],
-    )
+    """One distributed iteration (the default distributed schedule)."""
+    return distributed_scheduler(dcfg, ecfg).step(state)
 
 
 # ---------------------------------------------------------------------------
@@ -670,16 +707,19 @@ def init_dist_state(
     )
 
 
-def make_distributed_step(mesh, dcfg: DomainConfig, ecfg: EngineConfig):
+def make_distributed_step(mesh, dcfg: DomainConfig, ecfg: EngineConfig,
+                          scheduler: Optional[Scheduler] = None):
     """jit(shard_map(step)) over the stacked state representation.
 
     The global state stacks per-device states on a leading axis sharded over
     all spatial mesh axes (a single PartitionSpec prefix covers the whole
     pytree); inside shard_map each device sees a leading dim of one, squeezed
-    before / restored after the per-device body.
+    before / restored after the per-device body.  ``scheduler`` overrides the
+    default distributed schedule (custom ops; see :func:`distributed_scheduler`).
     """
     axes = tuple(dcfg.mesh_axes)
     spec_leading = P(axes)
+    sched = scheduler or distributed_scheduler(dcfg, ecfg)
 
     def body(state: DistState) -> DistState:
         local = jax.tree.map(lambda x: x[0], state)
@@ -692,7 +732,7 @@ def make_distributed_step(mesh, dcfg: DomainConfig, ecfg: EngineConfig):
                 jax.random.fold_in(jax.random.wrap_key_data(local.rng), idx)
             ),
         )
-        new = distributed_step(dcfg, ecfg, local)
+        new = sched.step(local)
         new = dataclasses.replace(new, rng=state.rng[0])
         return jax.tree.map(lambda x: x[None], new)
 

@@ -5,12 +5,20 @@ BioDynaMo's scheduler executes, per iteration: pre-standalone operations
 post-standalone operations (diffusion, visualization export).  Operations
 carry *execution frequencies* (§4.4.4 multi-scale support).
 
-Here the entire iteration is a pure function ``state' = step(config, state)``
-so the loop is a ``lax.scan`` (checkpointable, differentiable-if-wanted, and
-the distributed engine wraps the same function in ``shard_map``).  Frequencies
-become ``lax.cond``-free mod-masks: on TPU we prefer predicated compute over
-control flow for the cheap ops, and ``jax.lax.cond`` for the expensive ones
-(diffusion, sorting) where skipping saves real time on CPU hosts too.
+The schedule itself lives in `core/schedule.py` (DESIGN.md §5): a
+:class:`~repro.core.schedule.Scheduler` composes named, phase-tagged,
+frequency-gated :class:`~repro.core.schedule.Operation` values, and
+:func:`simulation_step` is nothing but ``Scheduler.default(config).step`` —
+the same scheduler the distributed engine (`core/distributed.py`) runs with
+distribution expressed as ops.  Insert / replace / remove ops on a schedule
+to add functionality without touching this module.
+
+The entire iteration is a pure function ``state' = step(config, state)`` so
+the loop is a ``lax.scan`` (checkpointable, differentiable-if-wanted, and
+the distributed engine wraps the same pipeline in ``shard_map``).
+Frequencies lower per-op as ``lax.cond`` (skip expensive work: sorting,
+diffusion) or as predicated mod-mask selects (cheap ops on TPU), chosen by
+each op's ``gate``.
 """
 
 from __future__ import annotations
@@ -24,10 +32,10 @@ import jax.numpy as jnp
 
 from . import diffusion as dgrid
 from .agents import AgentPool
-from .behaviors import Behavior, StepContext
-from .forces import ForceParams, mechanical_forces, update_static_flags_celllist
-from .grid import GridIndex, GridSpec, build_index, sort_agents
-from .neighbors import NeighborContext
+from .behaviors import Behavior
+from .forces import ForceParams
+from .grid import GridSpec
+from .schedule import Scheduler
 
 Array = jax.Array
 
@@ -83,95 +91,9 @@ def init_state(
     )
 
 
-def _apply_boundary(config: EngineConfig, position: Array) -> Array:
-    lo, hi = config.min_bound, config.max_bound
-    if config.boundary == "closed":
-        return jnp.clip(position, lo, hi)
-    if config.boundary == "toroidal":
-        return lo + jnp.mod(position - lo, hi - lo)
-    return position  # open
-
-
 def simulation_step(config: EngineConfig, state: SimulationState) -> SimulationState:
-    """One iteration of Algorithm 8."""
-    pool = state.pool
-
-    # --- pre standalone op: §5.4.2 agent sorting at its configured frequency.
-    if config.sort_frequency > 0:
-        do_sort = (state.step % config.sort_frequency) == 0
-        pool = jax.lax.cond(
-            do_sort, lambda p: sort_agents(config.spec, p), lambda p: p, pool
-        )
-
-    # --- pre standalone op: environment (neighbor index) build.  The dense
-    # (N, 27M) candidate tensor is built lazily by the NeighborContext — at
-    # most once per iteration, shared by behaviors / forces / static flags,
-    # and not at all when every consumer walks the cell list directly.
-    index = build_index(config.spec, pool)
-    neighbors = NeighborContext.for_pool(config.spec, index, pool)
-
-    ctx = StepContext(
-        rng=jax.random.fold_in(state.rng, state.step),
-        grids=dict(state.grids),
-        neighbors=neighbors,
-        dt=jnp.float32(config.dt),
-        step=state.step,
-        min_bound=config.min_bound,
-        max_bound=config.max_bound,
-    )
-
-    # --- agent operations: behaviors (Algorithm 8 L7–11).
-    pre_behavior_pos = pool.position
-    for behavior in config.behaviors:
-        ctx, pool = behavior(ctx, pool)
-
-    # --- agent operation: mechanical forces (§4.5.1) + displacement.
-    if config.force_params is not None:
-        force = mechanical_forces(
-            config.spec,
-            index,
-            pool,
-            config.force_params,
-            active_capacity=config.active_capacity,
-            impl=config.force_impl,
-            neighbors=neighbors,
-            fused_fallback=config.fused_overflow_fallback,
-            interpret=config.kernel_interpret,
-            tile=config.force_tile,
-        )
-        pool = pool.replace(position=pool.position + force * config.dt)
-
-    pool = pool.replace(position=_apply_boundary(config, pool.position))
-
-    # --- §5.5 static-agent detection for the *next* iteration (cell-level:
-    # a (N, 27) gather over per-cell moved bits, not (N, 27M) candidates).
-    if config.force_params is not None:
-        displacement = pool.position - pre_behavior_pos
-        pool = update_static_flags_celllist(
-            config.spec, index, pool, displacement, config.force_params,
-            query_position=neighbors.query_position,
-        )
-
-    # --- post standalone op: diffusion (Eq 4.3) at its frequency.
-    grids = dict(ctx.grids)
-    if grids and config.diffusion_frequency > 0:
-        do_diffuse = (state.step % config.diffusion_frequency) == 0
-        for name, g in grids.items():
-            grids[name] = jax.lax.cond(
-                do_diffuse,
-                lambda gg: dgrid.diffuse(
-                    gg, config.dt * config.diffusion_frequency,
-                    impl=config.diffusion_impl,
-                ),
-                lambda gg: gg,
-                g,
-            )
-
-    pool = pool.replace(age=pool.age + jnp.where(pool.alive, config.dt, 0.0))
-
-    return SimulationState(
-        pool=pool, grids=grids, rng=state.rng, step=state.step + 1
-    )
+    """One iteration of Algorithm 8 (the default schedule)."""
+    return Scheduler.default(config).step(state)
 
 
 def run(
@@ -179,13 +101,15 @@ def run(
     state: SimulationState,
     n_steps: int,
     collect: Optional[Callable[[SimulationState], jax.Array | dict]] = None,
+    scheduler: Optional[Scheduler] = None,
 ):
     """Run ``n_steps`` iterations under ``lax.scan``.
 
     ``collect`` optionally extracts per-step observables (e.g. SIR counts);
-    returns ``(final_state, stacked_observables)``.
+    ``scheduler`` overrides the default operation schedule (custom ops,
+    DESIGN.md §5); returns ``(final_state, stacked_observables)``.
     """
-    step_fn = functools.partial(simulation_step, config)
+    step_fn = (scheduler or Scheduler.default(config)).step
 
     def body(carry, _):
         new = step_fn(carry)
@@ -196,10 +120,11 @@ def run(
     return final, outs
 
 
-def run_jit(config: EngineConfig, state: SimulationState, n_steps: int, collect=None):
-    """Jitted entry point (config/n_steps static)."""
+def run_jit(config: EngineConfig, state: SimulationState, n_steps: int,
+            collect=None, scheduler: Optional[Scheduler] = None):
+    """Jitted entry point (config/n_steps/scheduler static)."""
     fn = jax.jit(
-        functools.partial(run, config),
+        functools.partial(run, config, scheduler=scheduler),
         static_argnames=("n_steps", "collect"),
     )
     return fn(state, n_steps=n_steps, collect=collect)

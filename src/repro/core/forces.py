@@ -312,6 +312,7 @@ def update_static_flags_celllist(
     displacement: Array,
     params: ForceParams,
     query_position: Optional[Array] = None,
+    ghost_alive: Optional[Array] = None,
 ) -> AgentPool:
     """§5.5 static detection through the cell list — no dense candidates.
 
@@ -332,14 +333,25 @@ def update_static_flags_celllist(
     ``query_position``: the positions the index was built from (defaults to
     the pool's current positions; the engine passes the step-start positions
     so the stencil matches the one behaviors and forces saw).
+
+    ``ghost_alive``: alive flags for source rows *beyond* the pool — the
+    distributed engine's aura agents (§6.2.1), whose cell-list slots hold
+    ids ≥ ``pool.capacity``.  Their per-step displacement is not locally
+    known (they are exchange-time snapshots), so any live ghost is
+    conservatively treated as moved: an agent whose neighborhood reaches
+    into the halo never goes static.  Without it (single-node), out-of-pool
+    slots cannot exist and the source set is the pool itself.
     """
     moved = jnp.linalg.norm(displacement, axis=-1) > params.static_tolerance
     moved = moved & pool.alive
 
     c = pool.capacity
-    slot_valid = index.cell_list < c
+    src_moved = moved if ghost_alive is None else jnp.concatenate(
+        [moved, ghost_alive]
+    )
+    slot_valid = index.cell_list < src_moved.shape[0]
     safe = jnp.where(slot_valid, index.cell_list, 0)
-    cell_moved = jnp.any(jnp.take(moved, safe) & slot_valid, axis=1)  # (n_cells,)
+    cell_moved = jnp.any(jnp.take(src_moved, safe) & slot_valid, axis=1)  # (n_cells,)
 
     qpos = pool.position if query_position is None else query_position
     nbr_cid, in_range = neighbor_cell_ids(spec, qpos)                 # (N, 27)

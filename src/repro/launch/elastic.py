@@ -1,4 +1,4 @@
-"""Fault tolerance + elastic scaling policy (DESIGN.md §5).
+"""Fault tolerance + elastic scaling policy (DESIGN.md §6).
 
 This module encodes the cluster-operations contract the framework is built
 around.  On this single-host container the mechanisms are exercised by

@@ -406,6 +406,94 @@ def scenario_lazy_candidates():
     print("lazy candidates OK")
 
 
+def scenario_scheduler_parity():
+    """DESIGN.md §5: both engines execute through ONE scheduler.  The
+    distributed schedule must be the single-node schedule op-for-op, with
+    distribution composed as ops: migrate + halo_exchange inserted (pre),
+    env_build / boundary / diffusion replaced in place (same name, phase,
+    frequency, gate) — and the §5.5 static_flags op present, the regression
+    the hardcoded duplicate pipeline used to drop."""
+    from repro.core.distributed import distributed_scheduler
+    from repro.core.schedule import Scheduler
+
+    mesh, dcfg, ecfg, pos, n = _force_only_setup("int16")
+    single = Scheduler.default(ecfg)
+    dist = distributed_scheduler(dcfg, ecfg)
+
+    s_names = [op.name for op in single.ordered_ops()]
+    d_names = [op.name for op in dist.ordered_ops()]
+    inserted = {"migrate", "halo_exchange"}
+    assert [x for x in d_names if x not in inserted] == s_names, (s_names, d_names)
+    assert d_names.index("sort") < d_names.index("migrate") < \
+        d_names.index("halo_exchange") < d_names.index("env_build")
+    assert "static_flags" in d_names, "§5.5 static detection dropped again"
+
+    # Replaced ops keep name/phase/frequency/gate — only fn differs.
+    s_ops = {op.name: op for op in single.ops}
+    d_ops = {op.name: op for op in dist.ops}
+    for name in s_names:
+        so, do = s_ops[name], d_ops[name]
+        assert (so.phase, so.frequency, so.gate) == (do.phase, do.frequency, do.gate), name
+    # Shared ops come from the single scheduler module's factories (one
+    # implementation, no distributed fork); only the three replaced ops and
+    # the two inserted ones are defined by the distributed module.
+    for name in d_names:
+        mod = d_ops[name].fn.__module__
+        if name in inserted | {"env_build", "boundary", "diffusion"}:
+            assert mod == "repro.core.distributed", (name, mod)
+        else:
+            assert mod == "repro.core.schedule", (name, mod)
+    print(f"op sequence: {d_names}")
+    print("scheduler parity OK")
+
+
+def scenario_static_flags_distributed():
+    """The distributed step now runs §5.5 static detection: a relaxed
+    configuration must accumulate static agents (the seed distributed engine
+    left pool.static permanently False), and ghost-adjacent agents must stay
+    conservative (never static while a live halo neighbor exists)."""
+    mesh, dcfg, ecfg, pos, n = _force_only_setup("int16")
+    state = init_dist_state(dcfg, capacity=192, positions=pos, diameter=1.6)
+    step = make_distributed_step(mesh, dcfg, ecfg)
+    for _ in range(30):
+        state = step(state)
+    static = np.asarray(state.pool.static)
+    alive = np.asarray(state.pool.alive)
+    frac = static.sum() / alive.sum()
+    assert static.any(), "no agent ever went static in the distributed engine"
+    assert not (static & ~alive).any(), "dead slots marked static"
+    print(f"static fraction after relaxation: {frac:.2f}")
+    print("distributed static flags OK")
+
+
+def scenario_bounds_honored():
+    """EngineConfig.min_bound/max_bound/boundary now govern the
+    non-decomposed dims of the distributed step (the seed hardcoded a closed
+    [0, depth] clamp): 'closed' clips z to [min_bound, max_bound], 'open'
+    leaves escaping agents alone — matching the single-node boundary op."""
+    import dataclasses as dc
+
+    mesh, dcfg, ecfg, pos, n = _force_only_setup("int16")
+    # One agent already outside the configured z-bounds; no forces/behaviors,
+    # so only the boundary op can touch z.
+    pos = pos[:32].copy()
+    pos[0, 2] = 15.5
+    state0 = init_dist_state(dcfg, capacity=192, positions=pos, diameter=1.6)
+    z_bounds = (0.0, 12.0)
+
+    finals = {}
+    for mode in ("closed", "open"):
+        cfg = dc.replace(ecfg, force_params=None, boundary=mode,
+                         min_bound=z_bounds[0], max_bound=z_bounds[1])
+        s = make_distributed_step(mesh, dcfg, cfg)(state0)
+        z = np.asarray(s.pool.position)[..., 2][np.asarray(s.pool.alive)]
+        finals[mode] = z
+    assert finals["closed"].max() <= z_bounds[1] + 1e-6, finals["closed"].max()
+    assert finals["open"].max() > z_bounds[1], finals["open"].max()
+    print(f"z max: closed={finals['closed'].max():.2f} open={finals['open'].max():.2f}")
+    print("bounds honored OK")
+
+
 def scenario_multipod():
     """3D decomposition over a (2, 2, 2) mesh with a 'pod' axis."""
     mesh = _mesh((2, 2, 2), ("pod", "data", "model"))
@@ -456,6 +544,9 @@ if __name__ == "__main__":
         "telemetry": scenario_telemetry,
         "packing_no_sort": scenario_packing_no_sort,
         "lazy_candidates": scenario_lazy_candidates,
+        "scheduler_parity": scenario_scheduler_parity,
+        "static_flags": scenario_static_flags_distributed,
+        "bounds": scenario_bounds_honored,
     }
     if which == "all":
         for name, fn in table.items():

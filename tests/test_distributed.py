@@ -102,6 +102,30 @@ def test_distributed_candidates_lazy():
     assert "lazy candidates OK" in out
 
 
+@pytest.mark.subprocess
+def test_scheduler_op_sequence_parity():
+    """DESIGN.md §5: the distributed schedule is the single-node schedule
+    op-for-op, with distribution composed as inserted/replaced ops."""
+    out = _run("scheduler_parity")
+    assert "scheduler parity OK" in out
+
+
+@pytest.mark.subprocess
+def test_distributed_runs_static_flag_detection():
+    """Regression: the duplicated distributed pipeline dropped §5.5 static
+    detection; through the shared scheduler it runs by construction."""
+    out = _run("static_flags")
+    assert "distributed static flags OK" in out
+
+
+@pytest.mark.subprocess
+def test_distributed_honors_engine_bounds():
+    """Regression: the distributed step ignored EngineConfig.min_bound/
+    max_bound/boundary for non-decomposed dims (hardcoded closed [0, depth])."""
+    out = _run("bounds")
+    assert "bounds honored OK" in out
+
+
 # ---------------------------------------------------------------------------
 # In-process unit tests (no devices needed): the sort-free packing primitives.
 # ---------------------------------------------------------------------------
