@@ -1,11 +1,12 @@
-"""Shared benchmark utilities."""
+"""Shared benchmark utilities.
+
+``repro`` resolves via the installed package (``pip install -e .``) or the
+PYTHONPATH=src the scripts/ entry points export — no sys.path mutation here.
+"""
 
 import json
 import os
-import sys
 import time
-
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import jax
 import numpy as np

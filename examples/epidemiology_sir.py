@@ -13,39 +13,29 @@ This example reproduces that pipeline end to end:
      minimizing the mean-squared error of the S/I/R trajectories;
   4. report the final normalized error.
 
-Scheduler demo (DESIGN.md §5): the run registers a custom `infectious_time`
-post op on the default schedule — a per-agent infectious-period tracker in
-four lines of behavior-free code, no engine edits — and reports the mean
-observed infectious duration against the 1/γ the ODE assumes.
+Model-API demo (DESIGN.md §6): the ABM is one declarative `Simulation` —
+the S/I/R curves come from the built-in kind-counts observable (recorded
+through the `lax.scan` ys, no hand-rolled `collect`), and the
+`infectious_time` custom post op tracks each agent's infectious period.
 
-Run:  PYTHONPATH=src python examples/epidemiology_sir.py [--fast]
+Run:  python examples/epidemiology_sir.py [--fast] [--smoke]
 """
 
 import argparse
 import dataclasses
-import sys
-
-sys.path.insert(0, "src")
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import Simulation
 from repro.core import (
     INFECTED,
     RECOVERED,
     SUSCEPTIBLE,
-    EngineConfig,
-    Operation,
-    Scheduler,
-    count_kinds,
-    init_state,
-    make_pool,
     random_movement,
-    run_jit,
     sir_infection,
     sir_recovery,
-    spec_for_space,
 )
 from repro.optim import pso
 
@@ -53,17 +43,13 @@ from repro.optim import pso
 BETA, GAMMA = 0.06719, 0.00521          # per hour, from R0=β/γ, γ=1/(8·24)
 
 
-def infectious_time_op() -> Operation:
+def infectious_time_op(ctx, state):
     """Custom standalone op: accumulate each agent's time spent infected."""
-
-    def fn(ctx, state):
-        pool = state.pool
-        dt = jnp.where(pool.alive & (pool.kind == INFECTED), ctx.config.dt, 0.0)
-        return dataclasses.replace(
-            state, pool=pool.set_attr("t_inf", pool.get("t_inf") + dt)
-        )
-
-    return Operation("infectious_time", fn, phase="post")
+    pool = state.pool
+    dt = jnp.where(pool.alive & (pool.kind == INFECTED), ctx.config.dt, 0.0)
+    return dataclasses.replace(
+        state, pool=pool.set_attr("t_inf", pool.get("t_inf") + dt)
+    )
 
 
 def analytical_sir(n: int, i0: int, beta: float, gamma: float, steps: int):
@@ -91,34 +77,39 @@ def run_abm(params, n, i0, space, steps, seed=0, return_state=False):
     key = jax.random.PRNGKey(seed)
     pos = jax.random.uniform(key, (n, 3), minval=0.0, maxval=space)
     kind = jnp.where(jnp.arange(n) < i0, INFECTED, SUSCEPTIBLE)
-    pool = make_pool(n, pos, diameter=0.5, kind=kind,
-                     attrs={"t_inf": jnp.zeros((n,), jnp.float32)})
-    spec = spec_for_space(0.0, space, max(radius, 4.0), max_per_cell=128)
-    config = EngineConfig(
-        spec=spec,
-        behaviors=(
+    sim = (
+        Simulation(space=(0.0, space), cell_size=max(float(radius), 4.0),
+                   boundary="toroidal", dt=1.0, max_per_cell=128, seed=seed)
+        .add_agents(n, position=pos, diameter=0.5, kind=kind, t_inf=0.0)
+        .use(
             random_movement(float(move)),
             sir_infection(float(radius), float(prob)),
             sir_recovery(GAMMA),
-        ),
-        dt=1.0,
-        min_bound=0.0,
-        max_bound=space,
-        boundary="toroidal",
+        )
+        .op(infectious_time_op, name="infectious_time", phase="post")
+        .observe_kinds("counts", n_kinds=3)   # S/I/R curves via the scan ys
     )
-    scheduler = Scheduler.default(config).append(infectious_time_op())
-    state = init_state(pool, seed=seed)
-    final, counts = run_jit(config, state, steps, collect=count_kinds,
-                            scheduler=scheduler)
+    final, obs = sim.run_jit(steps)
+    counts = np.asarray(obs["counts"])       # (steps, 3)
     if return_state:
-        return np.asarray(counts), final
-    return np.asarray(counts)      # (steps, 3)
+        return counts, final
+    return counts
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true", help="small population, no PSO")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny run for CI: build + step, skip the science bar")
     args = ap.parse_args(argv)
+
+    if args.smoke:
+        counts, final = run_abm((3.24, 0.36, 6.2), 150, 6, 40.0, 10,
+                                return_state=True)
+        assert counts.shape == (10, 3) and (counts.sum(axis=1) == 150).all()
+        assert float(np.asarray(final.pool.get("t_inf")).max()) > 0.0
+        print("smoke run OK (facade model built + stepped, counts recorded)")
+        return 0.0
 
     n, i0, space = (400, 8, 55.0) if args.fast else (2000, 20, 100.0)
     steps = 300 if args.fast else 1000

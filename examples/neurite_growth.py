@@ -16,63 +16,49 @@ example reproduces that model with the engine's primitives:
 This is exactly the §5.5 performance regime the paper calls out: "activity
 was limited to a neurite growth front, while the rest of the simulation
 remained static" — so the run reports the static-agent fraction, and the
-engine's work compaction keeps per-step cost proportional to the front.
+engine's work compaction keeps per-step cost proportional to the front
+(the compacted branch now builds only the active set's candidate rows
+through the lazy NeighborContext — see `mechanical_forces`).
 
-Scheduler demo (DESIGN.md §5): a custom `path_length` post op integrates
-each growth cone's per-step displacement (read off the scheduler's
-``OpContext.pre_positions`` snapshot) into a per-agent arc-length attribute
-— deposited trail segments inherit it, so every shaft agent carries its
-distance-from-soma along the neurite.
+Model-API demo (DESIGN.md §6): the model is one declarative `Simulation` —
+a typed (3,)-vector `direction` attr plus scalar `path_len`, a static cue
+declared as an initial-concentration substance with `diffusion_frequency=0`,
+§5.5 work compaction via `mechanics(active_capacity=...)`, and a custom
+`path_length` post op off the scheduler's `pre_positions` snapshot.
 
-Run:  PYTHONPATH=src python examples/neurite_growth.py
+Run:  python examples/neurite_growth.py [--smoke]
 """
 
+import argparse
 import dataclasses
-import sys
 import time
-
-sys.path.insert(0, "src")
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (
-    EngineConfig,
-    ForceParams,
-    Operation,
-    Scheduler,
-    add_agents,
-    init_state,
-    make_grid,
-    make_pool,
-    run_jit,
-    spec_for_space,
-)
+from repro import Simulation
+from repro.core import ForceParams, add_agents
 from repro.core.behaviors import StepContext
 from repro.core.diffusion import gradient_at
 
 TRAIL, CONE = 0, 1
 
 
-def path_length_op() -> Operation:
+def path_length_op(ctx, state):
     """Custom standalone op: arc length grown by each cone this step."""
-
-    def fn(ctx, state):
-        pool = state.pool
-        seg = jnp.linalg.norm(pool.position - ctx.pre_positions, axis=-1)
-        # Gate on the env-build alive snapshot: a cone spawned mid-step sits
-        # in a slot whose pre_positions entry is the dead slot's stale value,
-        # which would add one bogus |spawn_position| increment at birth.
-        grew = pool.alive & ctx.neighbors.query_alive & (pool.kind == CONE)
-        return dataclasses.replace(
-            state,
-            pool=pool.set_attr(
-                "path_len", pool.get("path_len") + jnp.where(grew, seg, 0.0)
-            ),
-        )
-
-    return Operation("path_length", fn, phase="post")
+    pool = state.pool
+    seg = jnp.linalg.norm(pool.position - ctx.pre_positions, axis=-1)
+    # Gate on the env-build alive snapshot: a cone spawned mid-step sits
+    # in a slot whose pre_positions entry is the dead slot's stale value,
+    # which would add one bogus |spawn_position| increment at birth.
+    grew = pool.alive & ctx.neighbors.query_alive & (pool.kind == CONE)
+    return dataclasses.replace(
+        state,
+        pool=pool.set_attr(
+            "path_len", pool.get("path_len") + jnp.where(grew, seg, 0.0)
+        ),
+    )
 
 
 def neurite_extension(grid_name: str, speed: float, w_old: float,
@@ -136,55 +122,43 @@ def neurite_extension(grid_name: str, speed: float, w_old: float,
     return run
 
 
-def main(n_neurons=16, steps=120, space=120.0, seed=0):
+def main(n_neurons=16, steps=120, space=120.0, seed=0, smoke=False):
+    if smoke:
+        n_neurons, steps = 4, 12
     rng = np.random.default_rng(seed)
     # somata on the bottom plate, apical cones pointing up
     xy = rng.uniform(20, space - 20, (n_neurons, 2))
     pos = np.concatenate([xy, np.full((n_neurons, 1), 10.0)], axis=1).astype(np.float32)
-    capacity = 8192
-    pool = make_pool(
-        capacity, jnp.asarray(pos), diameter=2.0,
-        kind=jnp.full((n_neurons,), CONE, jnp.int32),
-        attrs={
-            "direction": jnp.tile(jnp.array([[0.0, 0.0, 1.0]]), (n_neurons, 1)),
-            "path_len": jnp.zeros((n_neurons,), jnp.float32),
-        },
-    )
 
     # attractant: static gradient increasing with z (GaussianBand at the top)
-    grid = make_grid(0.0, space, 24, diffusion_coefficient=0.0)
-    zs = (np.arange(24) + 0.5) * (space / 24)
+    res = 24
+    zs = (np.arange(res) + 0.5) * (space / res)
     conc = np.exp(-((zs - space) ** 2) / (2 * 40.0**2))
-    grid = grid.replace if hasattr(grid, "replace") else grid
-    import dataclasses
+    cue = np.broadcast_to(conc[None, None, :], (res, res, res)).astype(np.float32)
 
-    grid = dataclasses.replace(
-        grid,
-        concentration=jnp.asarray(
-            np.broadcast_to(conc[None, None, :], (24, 24, 24)).copy(), jnp.float32
-        ),
+    built = (
+        Simulation(space=(0.0, space), cell_size=4.0, boundary="closed",
+                   dt=0.5, capacity=8192, max_per_cell=128, seed=seed,
+                   diffusion_frequency=0)        # static cue (paper: "static substances")
+        .add_agents(
+            n_neurons, position=pos, diameter=2.0,
+            kind=np.full((n_neurons,), CONE, np.int32),
+            direction=np.tile(np.array([[0.0, 0.0, 1.0]], np.float32),
+                              (n_neurons, 1)),
+            path_len=0.0,
+        )
+        .add_substance("guide", diffusion=0.0, resolution=res, concentration=cue)
+        .use(neurite_extension("guide", speed=2.4, w_old=4.0, w_grad=1.5,
+                               w_rand=0.6, branch_prob=0.02, target_z=104.0))
+        # §5.5: cost follows the growth front (subset candidate rows only)
+        .mechanics(ForceParams(static_tolerance=1e-3), active_capacity=2048)
+        .op(path_length_op, name="path_length", phase="post")
+        .build()
     )
-
-    config = EngineConfig(
-        spec=spec_for_space(0.0, space, 4.0, max_per_cell=128),
-        behaviors=(
-            neurite_extension("guide", speed=2.4, w_old=4.0, w_grad=1.5,
-                              w_rand=0.6, branch_prob=0.02, target_z=104.0),
-        ),
-        force_params=ForceParams(static_tolerance=1e-3),
-        dt=0.5,
-        min_bound=0.0,
-        max_bound=space,
-        boundary="closed",
-        diffusion_frequency=0,          # static cue (paper: "static substances")
-        active_capacity=2048,           # §5.5: cost follows the growth front
-    )
-
-    scheduler = Scheduler.default(config).append(path_length_op())
-    state = init_state(pool, {"guide": grid}, seed=seed)
+    state = built.state
     t0 = time.time()
     for _ in range(4):
-        state, _ = run_jit(config, state, steps // 4, scheduler=scheduler)
+        state, _ = built.run_jit(steps // 4, state=state)
     wall = time.time() - t0
 
     alive = int(state.pool.num_alive())
@@ -201,6 +175,11 @@ def main(n_neurons=16, steps=120, space=120.0, seed=0):
     path = np.asarray(state.pool.get("path_len"))[np.asarray(state.pool.alive)]
     print(f"arc length (custom op): max {path.max():.0f} μm "
           f"(straight-line soma→cue ≈ {104.0 - 10.0:.0f} μm)")
+    if smoke:
+        assert alive > n_neurons, "no trail deposited in smoke run"
+        assert path.max() > 0.0, "path-length op did not fire"
+        print("smoke run OK (facade model built + stepped, trail deposited)")
+        return alive, static_frac
     assert path.max() > 60.0, "path-length op did not accumulate along growth"
     # each lineage deposits ≈ (target_z − soma_z)/speed ≈ 39 segments
     assert n_trail > n_neurons * 30, "trail not deposited"
@@ -213,4 +192,7 @@ def main(n_neurons=16, steps=120, space=120.0, seed=0):
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny run for CI: build + step, skip the science bar")
+    main(smoke=ap.parse_args().smoke)

@@ -7,15 +7,12 @@ few hundred steps finish in minutes; pass --big for the ~100M configuration
 (same code path, longer wall time).  On a TPU cluster the identical driver
 (repro.launch.train) runs the full configs.
 
-Run:  PYTHONPATH=src python examples/train_lm.py [--steps 300] [--big]
+Run:  python examples/train_lm.py [--steps 300] [--big]    (pip install -e ., or PYTHONPATH=src)
 """
 
 import argparse
 import dataclasses
-import sys
 import time
-
-sys.path.insert(0, "src")
 
 import jax
 import jax.numpy as jnp

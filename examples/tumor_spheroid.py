@@ -7,37 +7,29 @@ observable is the spheroid diameter over time (from the bounding radius of
 the population), which must grow monotonically and the population must
 expand from its seed, mirroring the in-vitro curves.
 
-Scheduler demo (DESIGN.md §5): a custom mask-gated `radial_census` post op
-(frequency 8 — §4.4.4 multi-scale) records each cell's distance from the
-spheroid seed, so the expansion profile is an in-simulation observable
-rather than a host-side post-process.
+Model-API demo (DESIGN.md §6): the model is one declarative `Simulation`
+with capacity headroom for division (`capacity=4096` over 60 seed cells)
+and a custom mask-gated `radial_census` post op (frequency 8 — §4.4.4
+multi-scale); the chunked run drives the built triple's evolving state.
 
-Run:  PYTHONPATH=src python examples/tumor_spheroid.py
+Run:  python examples/tumor_spheroid.py [--smoke]
 """
 
+import argparse
 import dataclasses
-import sys
 import time
 
-sys.path.insert(0, "src")
-
-import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import Simulation
 from repro.core import (
-    EngineConfig,
     ForceParams,
     Operation,
-    Scheduler,
     apoptosis,
     brownian_motion,
     cell_division,
     growth,
-    init_state,
-    make_pool,
-    run_jit,
-    spec_for_space,
 )
 
 
@@ -67,39 +59,36 @@ def spheroid_diameter(pool) -> float:
     return float(2.0 * r95)
 
 
-def main(n_init=60, capacity=4096, steps=240, seed=0):
+def main(n_init=60, capacity=4096, steps=240, seed=0, smoke=False):
+    if smoke:
+        n_init, capacity, steps = 24, 512, 12
     space = 300.0
     rng = np.random.default_rng(seed)
     # seed cluster at the center
     pos = (150.0 + rng.normal(0, 12.0, (n_init, 3))).astype(np.float32)
-    pool = make_pool(capacity, jnp.asarray(pos), diameter=14.0,
-                     attrs={"radial": jnp.zeros((n_init,), jnp.float32)})
 
-    config = EngineConfig(
-        spec=spec_for_space(0.0, space, 18.0, max_per_cell=96),
-        behaviors=(
+    built = (
+        Simulation(space=(0.0, space), cell_size=18.0, boundary="closed",
+                   dt=1.0, capacity=capacity, max_per_cell=96, seed=seed)
+        .add_agents(n_init, position=pos, diameter=14.0, radial=0.0)
+        .use(
             brownian_motion(0.15),                 # Table 4.2 random movement
             growth(60.0, 18.0),                    # μm³/h to max diameter
             cell_division(0.02, trigger_diameter=17.0),
             apoptosis(0.002, min_age=87.0),        # min age to apoptosis [h]
-        ),
-        force_params=ForceParams(),
-        dt=1.0,
-        min_bound=0.0,
-        max_bound=space,
-        boundary="closed",
-        active_capacity=None,
+        )
+        .mechanics(ForceParams())
+        .op(radial_census_op(150.0))
+        .build()
     )
-
-    scheduler = Scheduler.default(config).append(radial_census_op(150.0))
-    state = init_state(pool, seed=seed)
+    state = built.state
     d0 = spheroid_diameter(state.pool)
     n0 = int(state.pool.num_alive())
 
     diam = []
     t0 = time.time()
     for chunk in range(6):
-        state, _ = run_jit(config, state, steps // 6, scheduler=scheduler)
+        state, _ = built.run_jit(steps // 6, state=state)
         diam.append(spheroid_diameter(state.pool))
     wall = time.time() - t0
 
@@ -112,6 +101,10 @@ def main(n_init=60, capacity=4096, steps=240, seed=0):
     print(f"radial census (custom op, freq 8): "
           f"p95 radius {np.quantile(radial, 0.95):.0f} μm")
     assert radial.max() > 0.0, "radial census op did not fire"
+    if smoke:
+        assert n1 >= n0, "population shrank in a growth-dominated smoke run"
+        print("smoke run OK (facade model built + stepped, census fired)")
+        return
     assert n1 > 1.5 * n0, "population did not grow"
     assert diam[-1] > d0 * 1.2, "spheroid did not expand"
     # growth is roughly monotone (small stochastic dips allowed)
@@ -120,4 +113,7 @@ def main(n_init=60, capacity=4096, steps=240, seed=0):
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny run for CI: build + step, skip the science bar")
+    main(smoke=ap.parse_args().smoke)

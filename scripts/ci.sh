@@ -16,6 +16,8 @@
 #   * bench_fused_force re-probes the fused step at the tracked size
 #     (compile-only cost_analysis) and asserts bytes/step within 5% of
 #     results/bench/fused_force.json.
+# The example smoke tier (scripts/examples.sh) runs each use-case example a
+# handful of steps through the `Simulation` model API (DESIGN.md §6).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -25,6 +27,10 @@ scripts/test.sh "$@"
 echo
 echo "=== CI tier 2: benchmark smoke ==="
 scripts/bench.sh
+
+echo
+echo "=== CI tier 3: example smoke (model API) ==="
+scripts/examples.sh
 
 echo
 echo "CI gate passed."

@@ -1,0 +1,20 @@
+#!/usr/bin/env bash
+# Example smoke tier (CI tier 3, see scripts/ci.sh).
+#
+# Runs each of the four use-case examples for a handful of steps through the
+# `Simulation` model API (DESIGN.md §6) — `--smoke` shrinks populations /
+# step horizons and skips the multi-minute science bars, so a facade or
+# engine API drift that breaks scenario definition fails in seconds here
+# instead of rotting until the next full example run.  Full-science runs
+# remain `python examples/<name>.py` (no flag).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+for ex in quickstart epidemiology_sir tumor_spheroid neurite_growth; do
+    echo "--- examples/${ex}.py --smoke"
+    python "examples/${ex}.py" --smoke
+done
+
+echo "example smoke tier passed."

@@ -1,6 +1,11 @@
 """TeraAgent-JAX: extreme-scale agent-based simulation (BioDynaMo/TeraAgent
 reproduction) + multi-pod LM training/serving framework on JAX/Pallas.
 
+The model API is re-exported at the top level: ``from repro import
+Simulation`` declares a complete model (agents, behaviors, substances,
+operations, observables) and runs it single-node or distributed — see
+`core/api.py` (DESIGN.md §6).
+
 Subpackages:
   core        — the paper's contribution: the ABM engine + TeraAgent
   models      — the assigned LM architecture zoo
@@ -11,4 +16,20 @@ Subpackages:
   optim, data, checkpoint, sharding, training — substrates
 """
 
-__version__ = "1.0.0"
+# The model API re-exports are lazy (PEP 562): importing `repro` must not
+# import jax-array-creating modules — launch/dryrun tooling sets XLA_FLAGS
+# *after* `import repro` and before first device use, and an eager
+# `repro.core` import would lock the device backend first (see
+# launch/mesh.py's module-constant note).
+_API = ("Simulation", "BuiltSimulation", "DistributedSimulation", "Observable")
+
+__all__ = list(_API)
+__version__ = "1.1.0"
+
+
+def __getattr__(name: str):
+    if name in _API:
+        from repro.core import api
+
+        return getattr(api, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,6 +1,7 @@
 """repro.core — the paper's contribution: an agent-based simulation engine.
 
 Layer map (DESIGN.md §3):
+  api          the declarative model API: Simulation → both engines (DESIGN §6)
   agents       SoA agent pools, parallel add/remove (§5.3.2)
   morton       space-filling-curve utilities (§5.4.2)
   grid         uniform-grid neighbor index (§5.3.1)
@@ -14,6 +15,7 @@ Layer map (DESIGN.md §3):
   distributed  TeraAgent: the same schedule with distribution as ops (§6.2)
 """
 
+from .api import BuiltSimulation, DistributedSimulation, Observable, Simulation
 from .agents import (
     AgentPool,
     add_agents,
@@ -68,6 +70,7 @@ from .neighbors import NeighborContext
 from .schedule import Operation, OpContext, Scheduler
 
 __all__ = [
+    "Simulation", "BuiltSimulation", "DistributedSimulation", "Observable",
     "AgentPool", "add_agents", "compact", "compact_indices", "make_pool",
     "permute", "remove_agents",
     "StepContext", "apoptosis", "brownian_motion", "cell_division", "chemotaxis",

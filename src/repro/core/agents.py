@@ -135,6 +135,48 @@ def make_pool(
 
 
 # --------------------------------------------------------------------------
+# Attribute schema validation (the typed SoA attr surface of the model API).
+# --------------------------------------------------------------------------
+
+def canonicalize_attr(name: str, value: Any, n: int) -> Array:
+    """Validate/broadcast one per-agent attribute to ``n`` leading rows.
+
+    Scalars broadcast to ``(n,)`` (dtype inferred by jnp: python floats →
+    f32, ints → i32, bools → bool); arrays must already carry ``n`` rows.
+    Used by :class:`~repro.core.api.Simulation` so a registration error
+    surfaces at declaration time with the attribute's name, not as a shape
+    mismatch deep inside ``make_pool``/jit.
+    """
+    arr = jnp.asarray(value)
+    if arr.ndim == 0:
+        return jnp.full((n,), arr)
+    if arr.shape[0] != n:
+        raise ValueError(
+            f"attr {name!r}: leading dim {arr.shape[0]} != {n} agents in this "
+            f"group (per-agent attrs need one row per agent; scalars broadcast)"
+        )
+    return arr
+
+
+def attr_signature(arr: Array) -> tuple:
+    """The schema key of one attribute array: (trailing shape, dtype)."""
+    return (tuple(arr.shape[1:]), jnp.dtype(arr.dtype))
+
+
+def check_attr_schema(name: str, arr: Array, schema: Mapping[str, tuple]) -> None:
+    """Assert ``arr`` matches the (trailing-shape, dtype) signature already
+    registered for ``name``; raises with both signatures spelled out."""
+    want = schema[name]
+    got = attr_signature(arr)
+    if got != want:
+        raise TypeError(
+            f"attr {name!r}: group declares trailing shape {got[0]} dtype "
+            f"{got[1]}, but an earlier group declared {want[0]} {want[1]} — "
+            f"all agent groups must share one SoA schema"
+        )
+
+
+# --------------------------------------------------------------------------
 # Parallel add / remove (§5.3.2).
 # --------------------------------------------------------------------------
 

@@ -72,7 +72,7 @@ from . import delta as dcodec
 from . import diffusion as dgrid
 from .agents import AgentPool, compact_indices, free_slot_table, make_pool, remove_agents
 from .behaviors import StepContext
-from .engine import EngineConfig
+from .engine import EngineConfig, count_kinds
 from .grid import GridSpec, build_index_arrays
 from .neighbors import NeighborContext
 from .schedule import Operation, OpContext, Scheduler, apply_boundary
@@ -145,7 +145,8 @@ class DomainConfig:
     def ghost_capacity(self, pool_capacity: int) -> int:
         return pool_capacity + 2 * self.n_decomposed * self.halo_capacity
 
-    def grid_spec(self, box_size: float, max_per_cell: int) -> GridSpec:
+    def grid_spec(self, box_size: float, max_per_cell: int,
+                  use_morton: bool = True) -> GridSpec:
         """Grid over the halo-extended local domain."""
         origin = []
         dims = []
@@ -161,7 +162,19 @@ class DomainConfig:
             box_size=box_size,
             dims=tuple(dims),
             max_per_cell=max_per_cell,
+            use_morton=use_morton,
         )
+
+    def device_coords(self, dev: int) -> Tuple[int, ...]:
+        """Mesh coordinates of linear device index ``dev`` — the single
+        definition of the x-major (mesh_axes-order) linearization shared by
+        agent binning (:func:`init_dist_state`) and the model API's
+        substance splitting (`Simulation.distribute`)."""
+        coords = []
+        for d in reversed(range(self.n_decomposed)):
+            coords.append(dev % self.axis_sizes[d])
+            dev //= self.axis_sizes[d]
+        return tuple(coords[::-1])
 
 
 @jax.tree_util.register_dataclass
@@ -643,20 +656,30 @@ def init_dist_state(
     dcfg: DomainConfig,
     capacity: int,
     positions: np.ndarray,
-    diameter: float = 10.0,
+    diameter: float | np.ndarray = 10.0,
     kind: Optional[np.ndarray] = None,
     grids: Optional[Dict[str, dgrid.DiffusionGrid]] = None,
     seed: int = 0,
+    attrs: Optional[Dict[str, np.ndarray]] = None,
+    stacked_grids: Optional[Dict[str, dgrid.DiffusionGrid]] = None,
 ) -> DistState:
     """Build the *stacked* global state from global agent positions (host).
 
     positions are global coordinates in [0, extent·axis_size) per decomposed
     dim; they are binned to devices and re-based to local frames.
+    ``diameter`` and each ``attrs`` array may be scalar/per-agent — per-agent
+    values are binned to devices alongside the positions.  ``grids`` are
+    replicated to every device; ``stacked_grids`` (already carrying the
+    leading device axis, e.g. the model API's domain-split substances) are
+    used as-is and take precedence.
     """
     n_dev = dcfg.n_devices
     kind = np.zeros((positions.shape[0],), np.int32) if kind is None else kind
+    diam_arr = None if np.ndim(diameter) == 0 else np.asarray(diameter, np.float32)
+    attrs = {k: np.asarray(v) for k, v in (attrs or {}).items()}
 
-    # Device linear index: x-major over mesh_axes order.
+    # Per-agent device coordinates; binning matches DomainConfig.device_coords
+    # (the one definition of the device linearization) per mesh dim.
     dev_coord = []
     local = positions.copy().astype(np.float32)
     for d in range(dcfg.n_decomposed):
@@ -664,27 +687,35 @@ def init_dist_state(
         c = np.clip(c, 0, dcfg.axis_sizes[d] - 1)
         dev_coord.append(c)
         local[:, d] = positions[:, d] - c * dcfg.extent
-    lin = np.zeros(positions.shape[0], np.int64)
-    for d in range(dcfg.n_decomposed):
-        lin = lin * dcfg.axis_sizes[d] + dev_coord[d]
 
     pools = []
     for dev in range(n_dev):
-        sel = lin == dev
+        coords = dcfg.device_coords(dev)
+        sel = np.all(
+            [dev_coord[d] == coords[d] for d in range(dcfg.n_decomposed)],
+            axis=0,
+        )
         n_here = int(sel.sum())
         if n_here > capacity:
             raise ValueError(
                 f"device {dev} holds {n_here} agents > capacity {capacity}"
             )
         pools.append(
-            make_pool(capacity, local[sel], diameter=diameter, kind=jnp.asarray(kind[sel]))
+            make_pool(
+                capacity,
+                local[sel],
+                diameter=diameter if diam_arr is None else jnp.asarray(diam_arr[sel]),
+                kind=jnp.asarray(kind[sel]),
+                attrs={k: jnp.asarray(v[sel]) for k, v in attrs.items()},
+            )
         )
     pool = jax.tree.map(lambda *xs: jnp.stack(xs), *pools)
 
     base_grids = dict(grids or {})
-    stacked_grids = {
+    stacked_grids = dict(stacked_grids or {}) | {
         name: jax.tree.map(lambda x: jnp.stack([x] * n_dev), g)
         for name, g in base_grids.items()
+        if name not in (stacked_grids or {})
     }
     scale = (dcfg.extent + 2 * dcfg.halo_width) / 32767.0
     codec = HaloCodecState.create(dcfg.n_decomposed, dcfg.halo_capacity, scale)
@@ -740,12 +771,12 @@ def make_distributed_step(mesh, dcfg: DomainConfig, ecfg: EngineConfig,
     return jax.jit(sharded)
 
 
-def global_kind_counts(state: DistState, n_kinds: int = 3) -> Array:
-    """Host-side observable across all devices."""
-    kind = state.pool.kind.reshape(-1)
-    alive = state.pool.alive.reshape(-1)
-    onehot = (kind[:, None] == jnp.arange(n_kinds)[None, :]) & alive[:, None]
-    return jnp.sum(onehot.astype(jnp.int32), axis=0)
+def global_kind_counts(state: DistState, n_kinds: Optional[int] = None) -> Array:
+    """Host-side observable across all devices.  Delegates to
+    :func:`~repro.core.engine.count_kinds`, which flattens the device axis;
+    ``n_kinds`` derives from the kinds present unless given — pass it
+    explicitly when dynamics can reach kinds not yet present."""
+    return count_kinds(state, n_kinds)
 
 
 def halo_wire_stats(state: DistState) -> Dict[str, float]:

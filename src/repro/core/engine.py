@@ -61,8 +61,9 @@ class EngineConfig:
     # overflows max_per_cell (cell-list truncation would drop pair forces).
     # Disable only when max_per_cell is a guaranteed bound; that keeps the
     # dense path out of the compiled step entirely.  (Combining "fused" with
-    # active_capacity keeps §5.5 semantics but the compacted branch still
-    # gathers dense candidate rows — see mechanical_forces.)
+    # active_capacity composes: the compacted branch builds an (A, 27M)
+    # subset via NeighborContext.candidates_for, never the dense (C, 27M)
+    # tensor — see mechanical_forces.)
     fused_overflow_fallback: bool = True
     # Pallas interpret mode for the kernel force impls (CPU-container
     # default; set False on TPU hardware for the Mosaic lowering).
@@ -102,40 +103,136 @@ def run(
     n_steps: int,
     collect: Optional[Callable[[SimulationState], jax.Array | dict]] = None,
     scheduler: Optional[Scheduler] = None,
+    observables: Optional[Tuple[Tuple[str, Callable, int], ...]] = None,
 ):
     """Run ``n_steps`` iterations under ``lax.scan``.
 
     ``collect`` optionally extracts per-step observables (e.g. SIR counts);
-    ``scheduler`` overrides the default operation schedule (custom ops,
-    DESIGN.md §5); returns ``(final_state, stacked_observables)``.
+    ``observables`` is the model-API form of the same thing — a static tuple
+    of ``(name, fn, frequency)`` triples, each ``fn(state) -> array``
+    evaluated on the post-step state of iterations whose (pre-increment)
+    step counter is ``≡ 0 (mod frequency)``.  Frequency-1 observables ride
+    the scan ys (one row per step); frequency-k ones record *in-scan* into a
+    ``⌈n/k⌉``-row carry buffer via a counter-gated ``lax.cond`` — the fn is
+    only evaluated on firing iterations and non-firing rows never
+    materialize (an every-100-steps field snapshot costs 1/100th, not 100×).
+    Returned as ``{name: rows}``; buffer rows beyond the window's actual
+    firing count (possible when the start step is not ≡ 0 mod k) stay zero —
+    the :class:`~repro.core.api.Simulation` facade, which knows the concrete
+    start step, slices them off.  ``collect`` and ``observables`` are
+    mutually exclusive.  ``scheduler`` overrides the default operation
+    schedule (custom ops, DESIGN.md §5); returns ``(final_state, outs)``.
     """
+    if collect is not None and observables:
+        raise ValueError("pass either collect= or observables=, not both")
     step_fn = (scheduler or Scheduler.default(config)).step
 
-    def body(carry, _):
-        new = step_fn(carry)
-        out = collect(new) if collect is not None else jnp.zeros((), jnp.int32)
-        return new, out
+    obs = tuple(observables or ())
+    names = [n for n, _, _ in obs]
+    if len(set(names)) != len(names):
+        raise ValueError(f"duplicate observable names in {names}")
+    streamed = tuple((n, f) for n, f, k in obs if k == 1)
+    gated = tuple((n, f, k) for n, f, k in obs if k > 1)
 
-    final, outs = jax.lax.scan(body, state, None, length=n_steps)
+    if gated:
+        protos = jax.eval_shape(
+            lambda s: {name: fn(s) for name, fn, _ in gated}, state
+        )
+        bufs0 = {
+            name: jnp.zeros((-(-n_steps // k),) + protos[name].shape,
+                            protos[name].dtype)
+            for name, _, k in gated
+        }
+        idx0 = {name: jnp.zeros((), jnp.int32) for name, _, _ in gated}
+    else:
+        bufs0, idx0 = {}, {}
+
+    def body(carry, _):
+        st, bufs, idx = carry
+        new = step_fn(st)
+        bufs, idx = dict(bufs), dict(idx)
+        for name, fn, k in gated:
+            fires = (st.step % k) == 0
+            row = idx[name]
+
+            def write(b, _fn=fn, _row=row):
+                return b.at[_row].set(_fn(new))
+
+            bufs[name] = jax.lax.cond(fires, write, lambda b: b, bufs[name])
+            idx[name] = row + fires.astype(jnp.int32)
+        if streamed:
+            out = {name: fn(new) for name, fn in streamed}
+        elif collect is not None:
+            out = collect(new)
+        else:
+            out = jnp.zeros((), jnp.int32)
+        return (new, bufs, idx), out
+
+    (final, bufs, _), outs = jax.lax.scan(
+        body, (state, bufs0, idx0), None, length=n_steps
+    )
+    if gated:
+        merged = dict(outs) if streamed else {}
+        merged.update(bufs)
+        outs = merged
     return final, outs
 
 
-def run_jit(config: EngineConfig, state: SimulationState, n_steps: int,
-            collect=None, scheduler: Optional[Scheduler] = None):
-    """Jitted entry point (config/n_steps/scheduler static)."""
-    fn = jax.jit(
+def jitted_runner(config: EngineConfig, scheduler: Optional[Scheduler] = None):
+    """A reusable jitted runner for one (config, scheduler).
+
+    Each :func:`run_jit` call builds a fresh ``jax.jit`` wrapper (whose
+    trace cache dies with it — the right lifetime for one-shot runs like a
+    PSO objective); callers that drive an evolving state in chunks should
+    hold onto one of these instead so the compiled scan is reused —
+    ``BuiltSimulation.run_jit`` does exactly that.
+    """
+    return jax.jit(
         functools.partial(run, config, scheduler=scheduler),
-        static_argnames=("n_steps", "collect"),
+        static_argnames=("n_steps", "collect", "observables"),
     )
-    return fn(state, n_steps=n_steps, collect=collect)
+
+
+def run_jit(config: EngineConfig, state: SimulationState, n_steps: int,
+            collect=None, scheduler: Optional[Scheduler] = None,
+            observables=None):
+    """Jitted entry point (config/n_steps/scheduler/observables static)."""
+    fn = jitted_runner(config, scheduler)
+    return fn(state, n_steps=n_steps, collect=collect, observables=observables)
 
 
 # Convenience observables ---------------------------------------------------
 
-def count_kinds(state: SimulationState, n_kinds: int = 3) -> Array:
-    """Per-kind alive counts — the SIR observable of Fig 4.17."""
-    onehot = (
-        (state.pool.kind[:, None] == jnp.arange(n_kinds)[None, :])
-        & state.pool.alive[:, None]
-    )
+def derive_n_kinds(kind: Array) -> int:
+    """``max(kind) + 1`` from a concrete kind array — the single derivation
+    used by every kind-count observable.  Raises under a trace (the count
+    sizes an output array, so it must be static) and only spans kinds
+    *currently present*."""
+    if isinstance(kind, jax.core.Tracer):
+        raise ValueError(
+            "deriving n_kinds under jit/scan is impossible (the output "
+            "shape must be static) — pass n_kinds= explicitly"
+        )
+    return int(jax.device_get(kind).max()) + 1 if kind.size else 1
+
+
+def count_kinds(state, n_kinds: Optional[int] = None) -> Array:
+    """Per-kind alive counts — the SIR observable of Fig 4.17.
+
+    Flattens any leading device axis, so the same function serves
+    ``SimulationState`` and the distributed engine's stacked ``DistState``.
+    ``n_kinds`` defaults to :func:`derive_n_kinds` — but only outside
+    jit/scan; under a trace pass it explicitly
+    (``functools.partial(count_kinds, n_kinds=...)`` as a ``collect``), or
+    use the :class:`~repro.core.api.Simulation` facade's kind-counts
+    observable, which derives it from the registered agent groups at build
+    time.  The derived default only spans kinds *currently present* — a
+    model whose dynamics can reach higher kind values (e.g. SIR before
+    anyone recovered) needs the explicit argument.
+    """
+    kind = state.pool.kind.reshape(-1)
+    alive = state.pool.alive.reshape(-1)
+    if n_kinds is None:
+        n_kinds = derive_n_kinds(kind)
+    onehot = (kind[:, None] == jnp.arange(n_kinds)[None, :]) & alive[:, None]
     return jnp.sum(onehot.astype(jnp.int32), axis=0)

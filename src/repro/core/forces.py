@@ -179,11 +179,12 @@ def mechanical_forces(
     agent tiles of this size (bounds the (tile, K, 3) working set; applies
     to the reference impl and the fused path's overflow fallback).
 
-    Note: combining ``impl="fused"`` with ``active_capacity`` keeps the
-    §5.5 compaction semantics but not the fused path's byte savings — the
-    compacted branch gathers per-agent *candidate* rows, so the dense
-    tensor is rebuilt inside that branch every step.  Prefer one of the two
-    optimizations per config until the compacted path is cell-list-aware.
+    Combining ``impl="fused"`` with ``active_capacity`` composes: the
+    compacted branch builds its candidate rows through
+    :meth:`NeighborContext.candidates_for` — an ``(A, 27M)`` subset tensor
+    for the active set only — so the dense ``(C, 27M)`` tensor appears
+    nowhere outside the overflow-fallback branch and per-step neighbor
+    traffic follows the number of *moving* agents, the paper's §5.5 intent.
     """
     if neighbors is None:
         neighbors = NeighborContext.for_pool(spec, index, pool)
@@ -260,15 +261,18 @@ def mechanical_forces(
 
     def compacted_path(_):
         # Deterministic sort-free compaction: active ids in index order
-        # (rank = prefix sum + bounded scatter; no stable argsort).
-        cand, mask = neighbors.candidates(cache=False)
+        # (rank = prefix sum + bounded scatter; no stable argsort).  The
+        # candidate rows come from the NeighborContext's subset builder —
+        # (A, 27M) for the active set only; the dense (C, 27M) tensor never
+        # exists in this branch.
         act_ids, act_valid, _ = compact_indices(active, a)
+        cand, mask = neighbors.candidates_for(act_ids, act_valid)
         gather = lambda x: jnp.take(x, act_ids, axis=0)
         sub_force = forces_from_candidates(
             gather(pool.position),
             gather(radius),
-            gather(cand),
-            gather(mask) & act_valid[:, None],
+            cand,
+            mask & act_valid[:, None],
             params,
             all_position=src_pos,
             all_radius=src_rad,

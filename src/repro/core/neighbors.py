@@ -125,6 +125,26 @@ class NeighborContext:
             self._cand = cand
         return self._cand
 
+    def candidates_for(self, ids: Array, valid: Array) -> Tuple[Array, Array]:
+        """Candidate rows for a *subset* of queries — never the dense tensor.
+
+        ``ids (A,) int32`` select query rows (e.g. the §5.5 compacted active
+        set), ``valid (A,) bool`` masks slots beyond the real subset (their
+        rows compute garbage-but-harmless values at ``ids``' fill index and
+        come back fully masked).  Row r equals row ``ids[r]`` of
+        :meth:`candidates` bit-for-bit — candidate generation is row-wise
+        independent — but only an ``(A, 27M)`` tensor is built, so an
+        ``active_capacity``-compacted force pass costs O(A·27M), not
+        O(C·27M).  No caching (subsets vary per consumer), hence safe to
+        call inside ``lax.cond`` branches.
+        """
+        qpos = jnp.take(self.query_position, ids, axis=0)
+        qalive = jnp.take(self.query_alive, ids, axis=0) & valid
+        qids = ids if self.query_ids is None else jnp.take(self.query_ids, ids)
+        return candidate_neighbors_arrays(
+            self.spec, self.index, qpos, qalive, qids
+        )
+
     @property
     def cand(self) -> Array:
         return self.candidates()[0]

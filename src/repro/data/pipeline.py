@@ -2,7 +2,7 @@
 
 Stateless-seeded: ``batch(step)`` is a pure function of (seed, step), so a
 restarted run regenerates identical batches with no pipeline checkpointing —
-the fault-tolerance property the launcher relies on (DESIGN.md §6).  Batches
+the fault-tolerance property the launcher relies on (DESIGN.md §7).  Batches
 are placed with the mesh's data-parallel sharding; on a multi-host cluster
 each host materializes only its addressable shard (jax.make_array_from_
 callback), so host memory stays O(batch/hosts).

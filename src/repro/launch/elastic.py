@@ -1,4 +1,4 @@
-"""Fault tolerance + elastic scaling policy (DESIGN.md §6).
+"""Fault tolerance + elastic scaling policy (DESIGN.md §7).
 
 This module encodes the cluster-operations contract the framework is built
 around.  On this single-host container the mechanisms are exercised by

@@ -494,6 +494,82 @@ def scenario_bounds_honored():
     print("bounds honored OK")
 
 
+def scenario_facade_parity():
+    """DESIGN.md §6: `Simulation.distribute` must compile onto the explicit
+    distributed wiring bit-for-bit — same DomainConfig/EngineConfig, same
+    scheduler, same binned initial state, same trajectories on a 2×2 mesh.
+    Also smoke-checks domain-split substances (per-device local grids)."""
+    from repro.core import ForceParams, Simulation
+    from repro.core.distributed import (
+        DomainConfig,
+        init_dist_state,
+        make_distributed_step,
+    )
+    from repro.core.engine import EngineConfig as ECfg
+
+    extent, space = 16.0, 32.0
+    mesh = _mesh((2, 2), ("data", "model"))
+    dcfg = DomainConfig(
+        mesh_axes=("data", "model"),
+        axis_sizes=(2, 2),
+        extent=extent,
+        halo_width=2.0,
+        halo_capacity=96,
+        migrate_capacity=48,
+        depth=space,
+        halo_codec="int16",
+    )
+    rng = np.random.default_rng(11)
+    n = 300
+    pos = rng.uniform(1.0, space - 1.0, (n, 3)).astype(np.float32)
+    n_steps = 12
+
+    # Facade: the model declared once, deployed on the mesh.
+    sim = (
+        Simulation(space=(0.0, space), cell_size=2.0, boundary="open",
+                   dt=0.05, max_per_cell=32, seed=3, sort_frequency=4,
+                   capacity=256)
+        .add_agents(n, position=pos, diameter=1.6)
+        .mechanics(ForceParams())
+    )
+    dsim = sim.distribute(mesh, dcfg)
+    f_state, _ = dsim.run(n_steps)
+
+    # Hand-wired: the explicit layer the facade must compile onto.
+    spec = dcfg.grid_spec(box_size=2.0, max_per_cell=32)
+    ecfg = ECfg(
+        spec=spec, behaviors=(), force_params=ForceParams(), dt=0.05,
+        min_bound=0.0, max_bound=space, boundary="open", sort_frequency=4,
+    )
+    assert dsim.config == ecfg, "facade-derived EngineConfig drifted"
+    h_state = init_dist_state(dcfg, capacity=256, positions=pos,
+                              diameter=1.6, seed=3)
+    step = make_distributed_step(mesh, dcfg, ecfg)
+    for _ in range(n_steps):
+        h_state = step(h_state)
+
+    for name in ("position", "diameter", "kind", "alive", "static"):
+        a = np.asarray(getattr(f_state.pool, name))
+        b = np.asarray(getattr(h_state.pool, name))
+        assert np.array_equal(a, b), f"pool.{name} not bit-exact"
+    assert np.array_equal(np.asarray(f_state.rng), np.asarray(h_state.rng))
+    assert int(np.asarray(f_state.pool.alive).sum()) == n
+
+    # Substances: global description → per-device local grids that step.
+    sim2 = (
+        Simulation(space=(0.0, space), cell_size=2.0, boundary="open",
+                   dt=0.05, max_per_cell=32, capacity=256, sort_frequency=4)
+        .add_agents(n, position=pos, diameter=1.6)
+        .add_substance("cue", diffusion=0.5, resolution=16)
+        .mechanics(ForceParams())
+    )
+    dsim2 = sim2.distribute(mesh, dcfg)
+    assert dsim2.state.grids["cue"].concentration.shape == (4, 8, 8, 16)
+    s2, _ = dsim2.run(2)
+    assert np.isfinite(np.asarray(s2.grids["cue"].concentration)).all()
+    print("facade parity OK")
+
+
 def scenario_multipod():
     """3D decomposition over a (2, 2, 2) mesh with a 'pod' axis."""
     mesh = _mesh((2, 2, 2), ("pod", "data", "model"))
@@ -544,6 +620,7 @@ if __name__ == "__main__":
         "telemetry": scenario_telemetry,
         "packing_no_sort": scenario_packing_no_sort,
         "lazy_candidates": scenario_lazy_candidates,
+        "facade_parity": scenario_facade_parity,
         "scheduler_parity": scenario_scheduler_parity,
         "static_flags": scenario_static_flags_distributed,
         "bounds": scenario_bounds_honored,

@@ -1,0 +1,341 @@
+"""Model-API tests (DESIGN.md §6): the `Simulation` facade must *compile
+onto* the explicit layer — bit-exact vs the hand-wired pipeline — and catch
+model declaration errors at registration time.
+
+The distributed facade/explicit parity (2×2 mesh) lives in
+tests/dist_scenarios.py `facade_parity`, spawned by test_distributed.py.
+"""
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import Simulation
+from repro.core import (
+    EngineConfig,
+    ForceParams,
+    Operation,
+    Scheduler,
+    chemotaxis,
+    count_kinds,
+    init_state,
+    make_grid,
+    make_pool,
+    run_jit,
+    secretion,
+    sir_infection,
+    sir_recovery,
+    random_movement,
+    spec_for_space,
+)
+
+SPACE = 50.0
+N = 120
+
+
+def _positions(n=N, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.uniform(5.0, SPACE - 5.0, (n, 3)).astype(np.float32)
+
+
+def _dose_op():
+    def dose(ctx, state):
+        pool = state.pool
+        from repro.core import concentration_at
+
+        c = concentration_at(state.grids["s0"], pool.position)
+        return dataclasses.replace(
+            state,
+            pool=pool.set_attr("dose", pool.get("dose") + jnp.where(pool.alive, c, 0.0)),
+        )
+
+    return dose
+
+
+def _model_pieces():
+    """Shared behavior/op *instances* so facade and hand-wired constructions
+    build configs that compare equal (closures compare by identity)."""
+    return (
+        (secretion("s0", 1.0, kind=0), chemotaxis("s0", 0.4, kind=1)),
+        _dose_op(),
+    )
+
+
+def _facade(seed=0, pieces=None, force_impl="reference"):
+    behaviors, dose = pieces or _model_pieces()
+    pos = _positions()
+    kind = (np.arange(N) % 2).astype(np.int32)
+    return (
+        Simulation(space=(0.0, SPACE), cell_size=6.0, boundary="closed",
+                   dt=0.5, max_per_cell=32, seed=seed, sort_frequency=8,
+                   diffusion_frequency=2)
+        .add_agents(N, position=pos, diameter=4.0, kind=kind, dose=0.0)
+        .add_substance("s0", diffusion=2.0, decay=0.001, resolution=10)
+        .use(*behaviors)
+        .mechanics(ForceParams(), impl=force_impl)
+        .op(dose, name="dose", phase="post")
+    )
+
+
+def _handwired(seed=0, pieces=None, force_impl="reference"):
+    """The same model through the explicit seed-era wiring."""
+    behaviors, dose = pieces or _model_pieces()
+    pos = _positions()
+    kind = (np.arange(N) % 2).astype(np.int32)
+    pool = make_pool(N, jnp.asarray(pos), diameter=4.0, kind=jnp.asarray(kind),
+                     attrs={"dose": jnp.zeros((N,), jnp.float32)})
+    spec = spec_for_space(0.0, SPACE, 6.0, max_per_cell=32)
+    grids = {"s0": make_grid(0.0, SPACE, 10, diffusion_coefficient=2.0,
+                             decay_constant=0.001)}
+    config = EngineConfig(
+        spec=spec,
+        behaviors=behaviors,
+        force_params=ForceParams(),
+        dt=0.5,
+        min_bound=0.0,
+        max_bound=SPACE,
+        boundary="closed",
+        sort_frequency=8,
+        diffusion_frequency=2,
+        force_impl=force_impl,
+    )
+    scheduler = Scheduler.default(config).append(
+        Operation("dose", dose, phase="post")
+    )
+    return config, scheduler, init_state(pool, grids, seed=seed)
+
+
+# ------------------------------------------------------------------ parity
+
+
+def test_facade_compiles_onto_explicit_triple():
+    """build() returns the same (EngineConfig, Scheduler, SimulationState)
+    the hand-wired pipeline constructs: identical static config, identical
+    op schedule, identical initial state arrays."""
+    pieces = _model_pieces()
+    built = _facade(pieces=pieces).build()
+    config, scheduler, state = _handwired(pieces=pieces)
+    assert built.config == config
+    assert [
+        (o.name, o.phase, o.frequency, o.gate) for o in built.scheduler.ordered_ops()
+    ] == [(o.name, o.phase, o.frequency, o.gate) for o in scheduler.ordered_ops()]
+    for got, want in zip(jax.tree.leaves(built.state), jax.tree.leaves(state)):
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_facade_run_bitexact_vs_handwired():
+    """The facade-built step is bit-exact vs the explicit wiring over a
+    multi-step jitted run (behaviors + forces + substances + custom op)."""
+    built = _facade().build()
+    f_final, _ = built.run_jit(12)
+    config, scheduler, state = _handwired()
+    h_final, _ = run_jit(config, state, 12, scheduler=scheduler)
+    np.testing.assert_array_equal(
+        np.asarray(f_final.pool.position), np.asarray(h_final.pool.position)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(f_final.pool.kind), np.asarray(h_final.pool.kind)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(f_final.pool.get("dose")), np.asarray(h_final.pool.get("dose"))
+    )
+    np.testing.assert_array_equal(
+        np.asarray(f_final.grids["s0"].concentration),
+        np.asarray(h_final.grids["s0"].concentration),
+    )
+    assert int(f_final.step) == int(h_final.step) == 12
+
+
+def test_facade_fused_matches_reference_config():
+    """mechanics(impl=...) maps onto EngineConfig.force_impl; the fused
+    facade step stays bit-exact vs an identically-configured explicit run."""
+    built = _facade(force_impl="fused").build()
+    assert built.config.force_impl == "fused"
+    f_final, _ = built.run_jit(4)
+    config, scheduler, state = _handwired(force_impl="fused")
+    h_final, _ = run_jit(config, state, 4, scheduler=scheduler)
+    np.testing.assert_array_equal(
+        np.asarray(f_final.pool.position), np.asarray(h_final.pool.position)
+    )
+
+
+# ----------------------------------------------------------- observables
+
+
+def test_observable_frequency_rows():
+    """freq k over n steps records ⌈n/k⌉ rows, the rows of steps ≡ 0 (mod k)."""
+    sim = _facade().observe_kinds("counts", frequency=1, n_kinds=2)
+    every, _ = sim.build().run_jit(10)
+    sim_k = _facade().observe_kinds("counts", frequency=3, n_kinds=2)
+    built = sim_k.build()
+    final, obs = built.run_jit(10)
+    assert obs["counts"].shape == (4, 2)          # ceil(10/3)
+    _, obs_all = _facade().observe_kinds("counts", n_kinds=2).build().run_jit(10)
+    np.testing.assert_array_equal(
+        np.asarray(obs["counts"]), np.asarray(obs_all["counts"])[::3]
+    )
+    # continuation: rows keep firing on the absolute step counter
+    _, obs2 = built.run_jit(5, state=final)       # counters 10..14 → 12 fires
+    assert obs2["counts"].shape == (1, 2)
+
+
+def test_observable_matches_collect_path():
+    """The facade's kind-counts observable equals the explicit collect=
+    count_kinds ys (same values through the same scan)."""
+    sim = _facade().observe_kinds("counts", n_kinds=3)
+    _, obs = sim.build().run_jit(6)
+    config, scheduler, state = _handwired()
+    _, counts = run_jit(config, state, 6, scheduler=scheduler,
+                        collect=functools.partial(count_kinds, n_kinds=3))
+    np.testing.assert_array_equal(np.asarray(obs["counts"]), np.asarray(counts))
+
+
+def test_observable_frequency_zero_disabled():
+    sim = _facade().observe("off", lambda s: s.pool.num_alive(), frequency=0)
+    _, obs = sim.build().run_jit(4)
+    assert "off" not in obs
+
+
+def test_count_kinds_derives_or_requires():
+    """count_kinds derives n_kinds from the pool when concrete and demands
+    it under a trace (static output shape)."""
+    pool = make_pool(8, jnp.zeros((4, 3)), kind=jnp.asarray([0, 2, 1, 2]))
+    state = init_state(pool)
+    assert count_kinds(state).shape == (3,)       # derived: max kind 2 → 3
+    with pytest.raises(ValueError, match="n_kinds"):
+        jax.jit(count_kinds)(state)
+
+
+# ------------------------------------------------------ schema validation
+
+
+def test_wrong_attr_shape_raises():
+    sim = Simulation(space=20.0, cell_size=2.0)
+    with pytest.raises(ValueError, match="energy"):
+        sim.add_agents(position=_positions(8) * 0.3, energy=np.zeros(5))
+
+
+def test_attr_dtype_mismatch_across_groups_raises():
+    sim = Simulation(space=20.0, cell_size=2.0)
+    sim.add_agents(position=_positions(8) * 0.3, energy=np.zeros(8, np.float32))
+    with pytest.raises(TypeError, match="schema"):
+        sim.add_agents(position=_positions(8, seed=1) * 0.3,
+                       energy=np.zeros(8, np.int32))
+
+
+def test_missing_attr_in_second_group_raises():
+    sim = Simulation(space=20.0, cell_size=2.0)
+    sim.add_agents(position=_positions(8) * 0.3, energy=0.0)
+    with pytest.raises(ValueError, match="schema"):
+        sim.add_agents(position=_positions(8, seed=1) * 0.3)
+
+
+def test_reserved_attr_name_raises():
+    sim = Simulation(space=20.0, cell_size=2.0)
+    with pytest.raises(ValueError, match="built-in"):
+        sim.add_agents(position=_positions(4) * 0.3, alive=np.ones(4, bool))
+
+
+def test_duplicate_substance_raises():
+    sim = Simulation(space=20.0, cell_size=2.0)
+    sim.add_substance("s", diffusion=1.0)
+    with pytest.raises(ValueError, match="already registered"):
+        sim.add_substance("s", diffusion=2.0)
+
+
+def test_positions_outside_space_raise():
+    sim = Simulation(space=10.0, cell_size=2.0)
+    with pytest.raises(ValueError, match="outside"):
+        sim.add_agents(position=np.full((3, 3), 12.0, np.float32))
+
+
+def test_capacity_overflow_raises():
+    sim = Simulation(space=20.0, cell_size=2.0, capacity=4)
+    sim.add_agents(position=_positions(8) * 0.3)
+    with pytest.raises(ValueError, match="capacity"):
+        sim.build()
+
+
+def test_multiple_groups_concatenate_with_headroom():
+    sim = Simulation(space=20.0, cell_size=4.0, capacity=32)
+    sim.add_agents(position=_positions(6) * 0.3, kind=0, tag=1.5)
+    sim.add_agents(position=_positions(4, seed=1) * 0.3, kind=1, tag=2.5)
+    state = sim.build().state
+    assert state.pool.capacity == 32
+    assert int(state.pool.num_alive()) == 10
+    tag = np.asarray(state.pool.get("tag"))
+    assert (tag[:6] == 1.5).all() and (tag[6:10] == 2.5).all()
+
+
+# --------------------------------------------------------- custom op surface
+
+
+def test_custom_op_anchoring():
+    sim = _facade()
+    noop = lambda ctx, state: state
+    sim.op(noop, name="probe", phase="pre", after="sort")
+    names = [o.name for o in sim.build().scheduler.ordered_ops()]
+    assert names.index("probe") == names.index("sort") + 1
+    with pytest.raises(ValueError, match="at most one"):
+        _facade().op(noop, name="x", before="sort", after="env_build")
+
+
+def test_fused_compaction_builds_subset_candidates_only(monkeypatch):
+    """§5.5 + fused: the compacted branch routes its candidate rows through
+    NeighborContext.candidates_for — only (A, 27M) subset builds, never a
+    dense (C, 27M) one, outside the overflow-fallback branch."""
+    import repro.core.neighbors as nb
+
+    capacity, active_cap = 64, 16
+    shapes = []
+    real = nb.candidate_neighbors_arrays
+
+    def counted(spec, index, qpos, qalive, qids=None):
+        shapes.append(qpos.shape[0])
+        return real(spec, index, qpos, qalive, qids)
+
+    monkeypatch.setattr(nb, "candidate_neighbors_arrays", counted)
+    pos = _positions(40) * 0.5
+    sim = (
+        Simulation(space=(0.0, SPACE), cell_size=6.0, boundary="closed",
+                   dt=0.1, capacity=capacity, max_per_cell=16)
+        .add_agents(position=pos, diameter=3.0)
+        .mechanics(ForceParams(), impl="fused", active_capacity=active_cap,
+                   overflow_fallback=False)
+    )
+    built = sim.build()
+    from repro.core import simulation_step
+
+    simulation_step(built.config, built.state)     # unjitted: python-level count
+    assert shapes == [active_cap], shapes           # one subset build, no dense
+
+
+def test_compaction_parity_fused_vs_dense_reference():
+    """Compacted-subset candidates keep §5.5 bit-exact: same force step with
+    and without active_capacity (all agents active → identical physics)."""
+    pos = _positions(40) * 0.5
+    mk = lambda **kw: (
+        Simulation(space=(0.0, SPACE), cell_size=6.0, boundary="closed",
+                   dt=0.1, capacity=64, max_per_cell=16)
+        .add_agents(position=pos, diameter=3.0)
+        .mechanics(ForceParams(), **kw)
+        .build()
+    )
+    plain, _ = mk().run_jit(5)
+    compacted, _ = mk(active_capacity=64).run_jit(5)
+    np.testing.assert_array_equal(
+        np.asarray(plain.pool.position), np.asarray(compacted.pool.position)
+    )
+
+
+def test_simulation_run_unjitted_matches_jit():
+    final_a, _ = _facade().run(3)
+    final_b, _ = _facade().run_jit(3)
+    np.testing.assert_allclose(
+        np.asarray(final_a.pool.position), np.asarray(final_b.pool.position),
+        rtol=0, atol=1e-6,
+    )

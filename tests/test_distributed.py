@@ -103,6 +103,15 @@ def test_distributed_candidates_lazy():
 
 
 @pytest.mark.subprocess
+def test_facade_distributed_parity():
+    """DESIGN.md §6: Simulation.distribute compiles onto the explicit
+    distributed wiring bit-exactly (2×2 mesh), incl. domain-split
+    substances."""
+    out = _run("facade_parity")
+    assert "facade parity OK" in out
+
+
+@pytest.mark.subprocess
 def test_scheduler_op_sequence_parity():
     """DESIGN.md §5: the distributed schedule is the single-node schedule
     op-for-op, with distribution composed as inserted/replaced ops."""

@@ -1,6 +1,7 @@
 """Engine integration tests: Algorithm 8 semantics + use-case physics."""
 
 import dataclasses
+import functools
 
 import jax
 import jax.numpy as jnp
@@ -52,7 +53,10 @@ def _sir_setup(n=300, n_inf=30, space=60.0, cap=None):
 
 def test_sir_population_conserved():
     config, state = _sir_setup()
-    final, counts = run_jit(config, state, 60, collect=count_kinds)
+    # n_kinds explicit: under scan the output shape must be static, and
+    # RECOVERED is not present at t=0 so derivation could not see it anyway.
+    final, counts = run_jit(config, state, 60,
+                            collect=functools.partial(count_kinds, n_kinds=3))
     counts = np.asarray(counts)
     assert (counts.sum(axis=1) == 300).all()
     # epidemic dynamics: infections happened, recoveries happened
@@ -62,7 +66,8 @@ def test_sir_population_conserved():
 
 def test_sir_monotone_recovered():
     config, state = _sir_setup()
-    _, counts = run_jit(config, state, 40, collect=count_kinds)
+    _, counts = run_jit(config, state, 40,
+                        collect=functools.partial(count_kinds, n_kinds=3))
     rec = np.asarray(counts)[:, RECOVERED]
     assert (np.diff(rec) >= 0).all()
 
