@@ -33,7 +33,14 @@ import jax.numpy as jnp
 import numpy as np
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
-from benchmarks.common import RESULTS_DIR, print_table, save_result, timeit
+from benchmarks.common import (
+    RESULTS_DIR,
+    argsort_build_index,
+    bytes_and_sorts,
+    print_table,
+    save_result,
+    timeit,
+)
 
 from repro.core import EngineConfig, ForceParams, init_state, make_pool, simulation_step
 from repro.core.forces import (
@@ -93,9 +100,12 @@ def _stage_fns(spec, params):
 
 def _seed_step(spec, params, pool_state):
     """The seed engine's force-step dataflow: candidates materialized twice
-    (simulation_step + mechanical_forces) and (N, 27M) static detection."""
+    (simulation_step + mechanical_forces), (N, 27M) static detection, and
+    the argsort grid build (`common.argsort_build_index`) — the baseline
+    must keep the seed's build, not inherit the ISSUE-5 sort-free one, or
+    the tracked seed/fused ratio stops measuring the seed engine."""
     pool = pool_state
-    index = build_index(spec, pool)
+    index = argsort_build_index(spec, pool.position, pool.alive)
     cand, cand_mask = candidate_neighbors(spec, index, pool)       # step copy
     cand2, mask2 = candidate_neighbors(spec, index, pool)          # forces copy
     force = forces_from_candidates(pool.position, pool.radius(), cand2, mask2, params)
@@ -167,14 +177,22 @@ def guard(tol: float = 0.05):
     pool = make_pool(n, jnp.asarray(pos), diameter=jnp.asarray(diam))
     spec = spec_for_space(0.0, SPACE, RADIUS, max_per_cell=m)
     state = init_state(pool, seed=0)
-    got = _bytes_accessed(jax.jit(_engine_step(spec, "fused", False)), state)
+    got, sorts = bytes_and_sorts(jax.jit(_engine_step(spec, "fused", False)), state)
 
     rel = abs(got - want) / want
     print(f"guard: scheduler-path fused step (N={n}, M={m}) = {got/1e6:.1f} MB "
-          f"vs tracked {want/1e6:.1f} MB ({rel*100:.2f}% drift, tol {tol*100:.0f}%)")
+          f"vs tracked {want/1e6:.1f} MB ({rel*100:.2f}% drift, tol {tol*100:.0f}%), "
+          f"sorts={sorts}")
     assert rel <= tol, (
         f"fused step bytes drifted {rel*100:.1f}% from the tracked result — "
         "the scheduler refactor changed the step dataflow"
+    )
+    # ISSUE 5: with the §5.4.2 sort gated off (sort_frequency=0 here) the
+    # whole single-node step must lower WITHOUT any sort op — the grid
+    # build's argsort was the last one on the hot path.
+    assert sorts == 0, (
+        f"fused step lowered with {sorts} sort ops — a sort crept back into "
+        "the per-step hot path (grid build / packing / compaction?)"
     )
     return got
 
@@ -214,10 +232,18 @@ def run(fast: bool = True):
         "fused_fallback": (jax.jit(_engine_step(spec, "fused", True)), (state,)),
     }
     for name, (jitted, args) in steps.items():
-        b = _bytes_accessed(jitted, *args)
+        b, sorts = bytes_and_sorts(jitted, *args)
         t = timeit(jitted, *args, warmup=1, iters=3)
-        out["step"][name] = {"bytes_accessed": b, "wall_s": t}
+        out["step"][name] = {"bytes_accessed": b, "wall_s": t, "step_sorts": sorts}
         rows.append((f"step/{name}", f"{b/1e6:.1f}", f"{t*1e3:.1f}"))
+        if name == "seed":
+            # The seed emulation keeps the argsort build by design — it
+            # doubles as the sort-detector sanity check.
+            assert sorts > 0, "seed baseline lost its argsort (detector?)"
+        else:
+            # Engine steps run with sort_frequency=0 — since the sort-free
+            # grid build (ISSUE 5) nothing in them may lower to a sort.
+            assert sorts == 0, f"step/{name}: expected sort-free, got {sorts}"
 
     out["ratios"] = {
         "step_bytes_seed_over_fused":

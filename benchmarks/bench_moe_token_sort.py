@@ -1,8 +1,9 @@
 """Beyond-paper: §5.4.2 agent sorting applied to MoE dispatch.
 
-Token-sorted dispatch (argsort by expert id + rank-in-run, the exact
-primitive of core.grid.build_index) vs. the unsorted one-hot-cumsum
-baseline.  The sorted path avoids the O(T·E) rank tensor and makes the
+Token-sorted dispatch (argsort by expert id + rank-in-run — the idiom the
+seed grid build used before the sort-free `kernels/cell_rank` ranking; the
+sort is kept here because the contiguous layout is the point, like the
+grid's §5.4.2 `sort_agents`) vs. the unsorted one-hot-cumsum baseline.  The sorted path avoids the O(T·E) rank tensor and makes the
 dispatch gather read contiguous runs — measured here as wall time and the
 rank-computation memory footprint."""
 

@@ -21,6 +21,23 @@
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
+echo "=== CI tier 0: test deps ==="
+# Property tests want the real hypothesis engine (pyproject `[test]` extra).
+# Offline/bare containers fall back to the bundled executor in
+# tests/conftest.py, which still RUNS every @given test (no stub skips) —
+# the install is best-effort, never a gate.
+if python -c "import hypothesis" 2>/dev/null; then
+    echo "hypothesis: real engine available"
+elif python -m pip install --quiet --disable-pip-version-check \
+        --retries 0 --timeout 5 hypothesis 2>/dev/null; then
+    echo "hypothesis: installed (the [test] extra's missing dep; pins, if" \
+         "ever added there, must be mirrored here)"
+else
+    echo "hypothesis: pip unavailable — property tests run on the bundled" \
+         "fallback executor (tests/conftest.py)"
+fi
+
+echo
 echo "=== CI tier 1: tests ==="
 scripts/test.sh "$@"
 

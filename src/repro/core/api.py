@@ -595,13 +595,22 @@ class Simulation:
         nd = dcfg.n_decomposed
         for name, grid in self._grids.items():
             res = grid.concentration.shape
-            for d in range(nd):
-                if res[d] % dcfg.axis_sizes[d] != 0:
-                    raise ValueError(
-                        f"substance {name!r}: resolution {res[d]} on dim {d} "
-                        f"is not divisible by the {dcfg.axis_sizes[d]}-device "
-                        f"decomposition"
-                    )
+            bad = [
+                d for d in range(nd)
+                if res[d] % dcfg.axis_sizes[d] != 0
+            ]
+            if bad:
+                detail = ", ".join(
+                    f"dim {d}: {res[d]} % {dcfg.axis_sizes[d]} != 0"
+                    for d in bad
+                )
+                raise ValueError(
+                    f"substance {name!r}: resolution does not divide the "
+                    f"mesh decomposition evenly on dims {bad} ({detail}); "
+                    f"uneven splits need ghost-voxel padding (unsupported — "
+                    f"see ROADMAP), so pick a resolution divisible by the "
+                    f"device counts on every decomposed dim"
+                )
             locals_ = []
             for dev in range(dcfg.n_devices):
                 coords = dcfg.device_coords(dev)  # the agent-binning order

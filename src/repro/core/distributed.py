@@ -50,7 +50,11 @@ Per-iteration dataflow (DESIGN.md §4 distributed adoption, §5 scheduler):
   * packing (``migrate`` / ``halo_exchange``) is sort-free: channel selection
     and free-slot insertion are cumsum-rank compaction scatters
     (`agents.compact_indices`), not stable argsorts over the pool — O(C) and
-    no (C,) permutation tensors on the 10-channel/step hot path;
+    no (C,) permutation tensors on the 10-channel/step hot path; the
+    ghost-extended grid build is sort-free too (`kernels/cell_rank` tiled-
+    histogram ranks), so with the frequency-gated §5.4.2 layout sort off
+    the whole per-device step lowers with zero HLO sort ops (asserted by
+    bench_dist_fused's ``fused_sort_off`` probe);
   * wire bytes are accounted per step into ``DistState.halo_payload_bytes`` /
     ``halo_baseline_bytes`` so the §6.2.3 compression ratio is observable
     (``halo_wire_stats``).
@@ -146,7 +150,7 @@ class DomainConfig:
         return pool_capacity + 2 * self.n_decomposed * self.halo_capacity
 
     def grid_spec(self, box_size: float, max_per_cell: int,
-                  use_morton: bool = True) -> GridSpec:
+                  use_morton: bool = True, rank_impl: str = "xla") -> GridSpec:
         """Grid over the halo-extended local domain."""
         origin = []
         dims = []
@@ -163,6 +167,7 @@ class DomainConfig:
             dims=tuple(dims),
             max_per_cell=max_per_cell,
             use_morton=use_morton,
+            rank_impl=rank_impl,
         )
 
     def device_coords(self, dev: int) -> Tuple[int, ...]:
@@ -564,7 +569,9 @@ def dist_env_build_op(dcfg: DomainConfig, ecfg: EngineConfig) -> Operation:
 
     def fn(ctx: OpContext, state: DistState) -> DistState:
         g_pos, g_rad, g_kind, g_alive = ctx.extras["halo_sources"]
-        index = build_index_arrays(ecfg.spec, g_pos, g_alive)
+        index = build_index_arrays(
+            ecfg.spec, g_pos, g_alive, interpret=ecfg.kernel_interpret
+        )
         ctx.index = index
         ctx.neighbors = NeighborContext.for_sources(
             ecfg.spec, index, state.pool, g_pos, g_rad, g_kind, g_alive

@@ -5,10 +5,14 @@ BioDynaMo's UniformGridEnvironment divides space into boxes of edge length
 array-based linked list, rebuilt in O(#agents) per iteration via timestamps.
 
 TPU adaptation (see DESIGN.md):
-  * build = sort.  Agents are sorted by their (optionally Morton-ordered) cell
-    id; each box's agents are then a contiguous run of the sorted order.  The
-    sort *is* the paper's §5.4.2 agent-sorting optimization — on TPU the grid
-    build and the memory-layout optimization fuse into a single primitive.
+  * build = rank + scatter, no sort.  Each agent's rank within its cell
+    comes from a sort-free tiled-histogram pass
+    (`repro.kernels.cell_rank`: per-tile per-cell counts → exclusive scan
+    over tiles → intra-tile ranks — the `agents.compact_indices` cumsum-rank
+    idiom generalized to a multi-valued key), the TPU analogue of the
+    paper's timestamped O(#agents) build.  The §5.4.2 agent-*sorting*
+    optimization is a separate, frequency-gated layout op
+    (:func:`sort_agents`) — the only sort anywhere in the step.
   * linked list = cell list.  A dense ``(n_cells, max_per_cell)`` index tensor
     replaces pointer chasing: deterministic ranks (position-in-run) scatter
     each agent into its cell row.  Overflow is detected, not UB.
@@ -42,6 +46,11 @@ class GridSpec:
     dims: Tuple[int, int, int] = dataclasses.field(metadata=dict(static=True))
     max_per_cell: int = dataclasses.field(metadata=dict(static=True))
     use_morton: bool = dataclasses.field(metadata=dict(static=True), default=True)
+    # Within-cell ranking impl for the build stage ("xla" | "pallas"),
+    # selected like EngineConfig.force_impl: "xla" is the pure-XLA
+    # tiled-histogram fallback (interpret-safe, container/test default),
+    # "pallas" the repro.kernels.cell_rank VMEM-histogram kernel for TPU.
+    rank_impl: str = dataclasses.field(metadata=dict(static=True), default="xla")
 
     @property
     def n_cells(self) -> int:
@@ -104,7 +113,13 @@ def sort_agents(spec: GridSpec, pool: AgentPool) -> AgentPool:
     return permute(pool, perm)
 
 
-def build_index_arrays(spec: GridSpec, position: Array, alive: Array) -> GridIndex:
+def build_index_arrays(
+    spec: GridSpec,
+    position: Array,
+    alive: Array,
+    interpret: bool = True,
+    rank_tile: int | None = None,
+) -> GridIndex:
     """Build the cell list (the §5.3.1 'build stage'), fully parallel.
 
     ``position``/``alive`` may be a ghost-extended superset of the local pool
@@ -113,29 +128,34 @@ def build_index_arrays(spec: GridSpec, position: Array, alive: Array) -> GridInd
     lets the fused cell-list force kernel consume this index unchanged —
     DESIGN.md §4).
 
-    Steps (all O(C) scatters/segment-sums — the TPU analogue of the paper's
-    timestamped O(#agents) build):
-      1. cell id per agent;
-      2. rank of each agent within its cell, via sorted-run position;
-      3. scatter agent indices into ``cell_list[cell, rank]``.
+    Steps — sort-free, the TPU analogue of the paper's timestamped
+    O(#agents) build (no O(C log C) component anywhere; the seed's per-step
+    stable argsort survives only as the test oracle in tests/grid_oracle.py):
+      1. cell id per agent (O(C));
+      2. rank of each agent within its cell, via the tiled-histogram pass of
+         `repro.kernels.cell_rank` (per-tile per-cell counts → exclusive
+         scan over tiles → intra-tile ranks; impl per ``spec.rank_impl``);
+      3. scatter agent indices into ``cell_list[cell, rank]`` (O(C)).
+
+    ``interpret`` selects Pallas interpret mode for ``rank_impl="pallas"``
+    (the engines pass ``EngineConfig.kernel_interpret``); ``rank_tile``
+    overrides the ≈√n_cells rank tile (tests keep interpret-mode grids
+    coarse with it).
     """
     c = position.shape[0]
     n_cells = spec.n_cells
     ijk = cell_coords(spec, position)
     cid = jnp.where(alive, linear_cell_id(spec, ijk), n_cells)  # (C,)
 
-    # Rank within cell: sort agent ids by cell, positions within equal-cid runs
-    # give ranks; then scatter ranks back to agent order.
-    order = jnp.argsort(cid, stable=True)                  # agent ids, cell-grouped
-    sorted_cid = cid[order]
-    # start-of-run marker → rank = position - start_of_run_position.
-    pos = jnp.arange(c, dtype=jnp.int32)
-    is_start = jnp.concatenate(
-        [jnp.ones((1,), bool), sorted_cid[1:] != sorted_cid[:-1]]
+    from repro.kernels.cell_rank import ops as cr_ops
+
+    rank = cr_ops.cell_rank(
+        cid,
+        n_cells=n_cells,
+        impl=spec.rank_impl,
+        tile=rank_tile,
+        interpret=interpret,
     )
-    run_start = jax.lax.cummax(jnp.where(is_start, pos, -1))
-    rank_sorted = pos - run_start                          # rank within cell
-    rank = jnp.zeros((c,), jnp.int32).at[order].set(rank_sorted)
 
     counts = jnp.zeros((n_cells + 1,), jnp.int32).at[cid].add(1)
     cell_count = counts[:n_cells]
@@ -158,8 +178,15 @@ def build_index_arrays(spec: GridSpec, position: Array, alive: Array) -> GridInd
     )
 
 
-def build_index(spec: GridSpec, pool: AgentPool) -> GridIndex:
-    return build_index_arrays(spec, pool.position, pool.alive)
+def build_index(
+    spec: GridSpec,
+    pool: AgentPool,
+    interpret: bool = True,
+    rank_tile: int | None = None,
+) -> GridIndex:
+    return build_index_arrays(
+        spec, pool.position, pool.alive, interpret=interpret, rank_tile=rank_tile
+    )
 
 
 _NEIGHBOR_OFFSETS = jnp.asarray(
@@ -228,6 +255,7 @@ def spec_for_space(
     interaction_radius: float,
     max_per_cell: int = 16,
     use_morton: bool = True,
+    rank_impl: str = "xla",
 ) -> GridSpec:
     """Convenience: cubic simulation space with box size = interaction radius.
 
@@ -244,4 +272,5 @@ def spec_for_space(
         dims=(n, n, n),
         max_per_cell=max_per_cell,
         use_morton=use_morton,
+        rank_impl=rank_impl,
     )

@@ -290,7 +290,9 @@ def env_build_op(config) -> Operation:
     the behaviors' StepContext."""
 
     def fn(ctx: OpContext, state):
-        index = build_index(config.spec, state.pool)
+        index = build_index(
+            config.spec, state.pool, interpret=config.kernel_interpret
+        )
         ctx.index = index
         ctx.neighbors = NeighborContext.for_pool(config.spec, index, state.pool)
         ctx.pre_positions = state.pool.position

@@ -9,6 +9,8 @@ Kernels:
   pairwise_force  — Eq 4.1 contact forces over dense candidates, §5.6.3
   cell_force      — Eq 4.1 forces fused with the cell-list walk (no dense
                     candidate tensor; DESIGN.md §4)
+  cell_rank       — sort-free within-cell ranking for the grid build
+                    (tiled histogram; kills the per-step argsort, §5.3.1)
   diffusion3d     — Eq 4.3 seven-point stencil
   flash_attention — online-softmax attention for the LM stack (GQA/causal/window)
   rmsnorm         — fused residual-stream normalization (one read, one write)

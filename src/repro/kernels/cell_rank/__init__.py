@@ -1,0 +1,2 @@
+"""cell_rank kernel package: sort-free within-cell ranking (grid build)."""
+from . import kernel, ops, ref  # noqa: F401

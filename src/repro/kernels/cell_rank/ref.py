@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for the within-cell rank primitive.
+
+The defining property (what both the Pallas kernel and the tiled pure-XLA
+fallback must reproduce bit-exactly):
+
+    rank[i] = |{ j < i : cid[j] == cid[i] }|
+
+i.e. the position agent i would take inside its cell under a *stable*
+grouping by cell id — without ever building that grouping.  O(C²) dense
+pairwise comparison: the semantic spec, used for validation at small sizes
+(the historical argsort implementation survives only as the test-side
+oracle in tests/grid_oracle.py).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def cell_rank_ref(cid: Array) -> Array:
+    """(C,) int32 within-cell ranks by dense pairwise comparison."""
+    c = cid.shape[0]
+    same = cid[:, None] == cid[None, :]
+    earlier = jnp.arange(c)[:, None] > jnp.arange(c)[None, :]
+    return jnp.sum((same & earlier).astype(jnp.int32), axis=1)

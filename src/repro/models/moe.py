@@ -6,7 +6,10 @@ Dispatch is the paper's §5.4.2 insight applied to MoE: assignments are
 *sorted by expert id* before the gather, so each expert's tokens form a
 contiguous run — the exact analogue of sorting agents along the space-
 filling curve so each grid cell's agents are contiguous.  The rank-within-
-run computation is the same primitive as `core.grid.build_index_arrays`.
+run computation is the argsort idiom the grid build used before its
+sort-free tiled-histogram rebuild (`repro.kernels.cell_rank`); here the
+sort stays on purpose — the contiguous *layout* is the point, exactly like
+the grid layer's frequency-gated `sort_agents`.
 Contiguous runs mean the (E, C, D) dispatch gather reads near-sequential
 memory and the expert einsum hits the MXU with dense blocks; with experts
 sharded over the tensor axis the dispatch becomes a single all-to-all.

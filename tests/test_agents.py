@@ -101,3 +101,32 @@ def test_population_accounting_property(n, n_remove, n_spawn, seed):
     expected = alive_after_rm + min(len(spawn_ids), free)
     assert int(new.num_alive()) == expected
     assert int(new.overflow) == max(len(spawn_ids) - free, 0)
+
+
+@settings(deadline=None, max_examples=20)
+@given(
+    c=st.integers(1, 64),
+    capacity=st.integers(1, 64),
+    density=st.floats(0.0, 1.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_compact_indices_property(c, capacity, density, seed):
+    """The sort-free compaction (§5.3.2): ids are exactly the set-bit
+    indices in ascending order (bounded by capacity), valid marks the
+    occupied ranks, n is the unbounded set-bit count."""
+    from repro.core.agents import compact_indices, free_slot_table
+
+    rng = np.random.default_rng(seed)
+    mask = rng.random(c) < density
+    ids, valid, n = compact_indices(jnp.asarray(mask), capacity)
+    set_idx = np.nonzero(mask)[0]
+    k = min(len(set_idx), capacity)
+    assert int(n) == len(set_idx)
+    np.testing.assert_array_equal(np.asarray(valid), np.arange(capacity) < k)
+    np.testing.assert_array_equal(np.asarray(ids)[:k], set_idx[:k])
+
+    # free_slot_table is the same primitive over the free mask.
+    table = np.asarray(free_slot_table(jnp.asarray(mask)))
+    free_idx = np.nonzero(~mask)[0]
+    np.testing.assert_array_equal(table[: len(free_idx)], free_idx)
+    assert (table[len(free_idx):] == c).all()

@@ -339,3 +339,26 @@ def test_simulation_run_unjitted_matches_jit():
         np.asarray(final_a.pool.position), np.asarray(final_b.pool.position),
         rtol=0, atol=1e-6,
     )
+
+
+def test_distribute_uneven_substance_resolution_raises():
+    """ROADMAP limitation, now under regression: distributed substances
+    require the resolution to divide the mesh evenly; `distribute` must
+    fail fast (before any device work — mesh untouched, so no multi-device
+    runtime is needed here) and name the offending dims."""
+    from repro.core.distributed import DomainConfig
+
+    dcfg = DomainConfig(
+        mesh_axes=("data", "model"), axis_sizes=(2, 2), extent=SPACE / 2,
+        halo_width=6.0, halo_capacity=32, migrate_capacity=16,
+        depth=SPACE,
+    )
+    sim = (
+        Simulation(space=(0.0, SPACE), cell_size=6.0)
+        .add_agents(position=_positions(16), diameter=4.0)
+        .add_substance("oxygen", diffusion=1.0, resolution=33)  # 33 % 2 != 0
+    )
+    with pytest.raises(ValueError, match=r"'oxygen'.*dims \[0, 1\]") as ei:
+        sim.distribute(mesh=None, dcfg=dcfg)
+    # Both offending dims spelled out, with the failing division.
+    assert "33 % 2 != 0" in str(ei.value)

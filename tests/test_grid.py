@@ -1,9 +1,18 @@
-"""Uniform-grid neighbor search tests (§5.3.1, §5.4.2)."""
+"""Uniform-grid neighbor search tests (§5.3.1, §5.4.2).
+
+Includes the sort-free build parity suite: `build_index_arrays` (tiled-
+histogram ranking, both impls) must be bit-exact vs the seed's argsort
+build, kept as the test-only oracle in tests/grid_oracle.py.
+"""
+
+import dataclasses
 
 import jax.numpy as jnp
 import numpy as np
 from hypothesis import given, settings
 from hypothesis import strategies as st
+
+from grid_oracle import build_index_arrays_argsort
 
 from repro.core import (
     build_index,
@@ -12,8 +21,9 @@ from repro.core import (
     sort_agents,
     spec_for_space,
 )
-from repro.core.grid import GridSpec
+from repro.core.grid import GridSpec, build_index_arrays
 from repro.core import morton
+from repro.kernels.cell_rank import ops as cr_ops
 
 
 def test_morton_roundtrip():
@@ -101,3 +111,140 @@ def test_cell_counts_match_population():
     spec = spec_for_space(0.0, 32.0, 4.0)
     index = build_index(spec, pool)
     assert int(index.cell_count.sum()) == 100
+
+
+# ---------------------------------------------------------------------------
+# Sort-free build: bit-exact parity vs the argsort oracle (ISSUE 5).
+# Both rank impls run with a coarse tile so the interpret-mode Pallas grid
+# stays a handful of programs (see MEMORY: interpret cost ∝ grid programs).
+# ---------------------------------------------------------------------------
+
+def _assert_build_parity(spec, position, alive, tile=16):
+    want = build_index_arrays_argsort(spec, position, alive)
+    for impl in ("xla", "pallas"):
+        got = build_index_arrays(
+            dataclasses.replace(spec, rank_impl=impl),
+            position, alive, rank_tile=tile,
+        )
+        np.testing.assert_array_equal(
+            np.asarray(got.cell_of_agent), np.asarray(want.cell_of_agent),
+            err_msg=f"cell_of_agent diverged ({impl})",
+        )
+        np.testing.assert_array_equal(
+            np.asarray(got.cell_list), np.asarray(want.cell_list),
+            err_msg=f"cell_list diverged ({impl})",
+        )
+        np.testing.assert_array_equal(
+            np.asarray(got.cell_count), np.asarray(want.cell_count),
+            err_msg=f"cell_count diverged ({impl})",
+        )
+        assert bool(got.overflowed) == bool(want.overflowed), impl
+
+
+def test_build_parity_random_pools_with_overflow():
+    """max_per_cell=2 over dense pools: many cells overflow; the truncated
+    cell list must still pick the same (lowest-index) agents per slot."""
+    spec = spec_for_space(0.0, 20.0, 4.0, max_per_cell=2)
+    for seed in range(5):
+        rng = np.random.default_rng(seed)
+        c = int(rng.integers(3, 97))
+        position = jnp.asarray(rng.uniform(0, 20, (c, 3)), jnp.float32)
+        alive = jnp.asarray(rng.random(c) < 0.8)
+        _assert_build_parity(spec, position, alive)
+
+
+def test_build_parity_all_dead():
+    spec = spec_for_space(0.0, 10.0, 2.0, max_per_cell=4)
+    rng = np.random.default_rng(7)
+    position = jnp.asarray(rng.uniform(0, 10, (33, 3)), jnp.float32)
+    _assert_build_parity(spec, position, jnp.zeros((33,), bool))
+
+
+def test_build_parity_single_agent():
+    spec = spec_for_space(0.0, 10.0, 2.0, max_per_cell=4)
+    position = jnp.asarray([[3.0, 4.0, 5.0]], jnp.float32)
+    _assert_build_parity(spec, position, jnp.ones((1,), bool))
+    _assert_build_parity(spec, position, jnp.zeros((1,), bool))
+
+
+def test_build_parity_ghost_extended():
+    """The distributed engine's build: a halo-extended spec over local +
+    ghost rows (ghosts land in the boundary cells, some ghost slots dead) —
+    the exact input shape of distributed.dist_env_build_op."""
+    from repro.core.distributed import DomainConfig
+
+    dcfg = DomainConfig(
+        mesh_axes=("x", "y"), axis_sizes=(2, 2), extent=30.0,
+        halo_width=3.0, halo_capacity=16, migrate_capacity=8, depth=30.0,
+    )
+    spec = dcfg.grid_spec(box_size=3.0, max_per_cell=3)
+    for seed in range(3):
+        rng = np.random.default_rng(100 + seed)
+        local = rng.uniform(0.0, 30.0, (64, 3))
+        ghosts = rng.uniform(0.0, 30.0, (64, 3))
+        # Push ghost rows into the aura bands of the decomposed dims.
+        for d in range(2):
+            band = rng.random(64) < 0.5
+            ghosts[band, d] = rng.uniform(-3.0, 0.0, int(band.sum()))
+            ghosts[~band, d] = rng.uniform(30.0, 33.0, int((~band).sum()))
+        position = jnp.asarray(
+            np.concatenate([local, ghosts]), jnp.float32
+        )
+        alive = jnp.asarray(rng.random(128) < 0.75)
+        _assert_build_parity(spec, position, alive)
+
+
+# ---------------------------------------------------------------------------
+# Rank-primitive properties (ISSUE 5 satellite; runs on the real hypothesis
+# engine when installed, on the bundled executor otherwise — never skips).
+# ---------------------------------------------------------------------------
+
+@settings(deadline=None, max_examples=15)
+@given(
+    c=st.integers(1, 120),
+    n_cells=st.integers(1, 200),
+    seed=st.integers(0, 2**31 - 1),
+    impl=st.sampled_from(["xla", "pallas"]),
+)
+def test_cell_rank_bijection_property(c, n_cells, seed, impl):
+    """Per cell, ranks are a bijection onto 0..count-1 — and stable: in
+    index order they are exactly arange(count)."""
+    rng = np.random.default_rng(seed)
+    cid = rng.integers(0, n_cells + 1, c)          # sentinel value included
+    rank = np.asarray(
+        cr_ops.cell_rank(jnp.asarray(cid, jnp.int32), n_cells=n_cells,
+                         impl=impl, tile=32)
+    )
+    for v in np.unique(cid):
+        group = rank[cid == v]
+        np.testing.assert_array_equal(group, np.arange(group.size))
+
+
+@settings(deadline=None, max_examples=15)
+@given(
+    n=st.integers(0, 90),
+    seed=st.integers(0, 2**31 - 1),
+    max_per_cell=st.sampled_from([1, 3, 8]),
+)
+def test_build_counts_match_histogram_property(n, seed, max_per_cell):
+    """cell_count equals the plain histogram of live agents' cell ids, and
+    dead agents are excluded everywhere (sentinel cell id, no cell_list
+    slot, no count)."""
+    cap = 96
+    rng = np.random.default_rng(seed)
+    spec = spec_for_space(0.0, 24.0, 4.0, max_per_cell=max_per_cell)
+    position = jnp.asarray(rng.uniform(0, 24, (cap, 3)), jnp.float32)
+    alive_np = np.zeros(cap, bool)
+    alive_np[rng.choice(cap, size=n, replace=False)] = True
+    index = build_index_arrays(spec, position, jnp.asarray(alive_np))
+
+    cid = np.asarray(index.cell_of_agent)
+    assert (cid[~alive_np] == spec.n_cells).all()
+    hist = np.bincount(cid[alive_np], minlength=spec.n_cells + 1)[: spec.n_cells]
+    np.testing.assert_array_equal(np.asarray(index.cell_count), hist)
+    assert int(index.cell_count.sum()) == n
+
+    listed = np.asarray(index.cell_list).reshape(-1)
+    listed = listed[listed < cap]
+    assert alive_np[listed].all(), "dead agent leaked into the cell list"
+    assert len(set(listed.tolist())) == listed.size
