@@ -18,11 +18,21 @@ the S/I/R curves come from the built-in kind-counts observable (recorded
 through the `lax.scan` ys, no hand-rolled `collect`), and the
 `infectious_time` custom post op tracks each agent's infectious period.
 
+Fault-tolerance demo (DESIGN.md §7): pass ``--checkpoint-dir`` to persist
+the run every ``--checkpoint-every`` steps; rerunning with the same
+directory resumes from the latest checkpoint instead of starting over, and
+``--kill-at N`` SIGKILLs the process mid-run (after the first checkpoint at
+step ≥ N) so CI can verify kill-and-resume reproduces the uninterrupted
+observable series bit-for-bit.
+
 Run:  python examples/epidemiology_sir.py [--fast] [--smoke]
 """
 
 import argparse
 import dataclasses
+import hashlib
+import os
+import signal
 
 import jax
 import jax.numpy as jnp
@@ -72,7 +82,8 @@ def analytical_sir(n: int, i0: int, beta: float, gamma: float, steps: int):
     return np.stack(out)           # (steps+1, 3)
 
 
-def run_abm(params, n, i0, space, steps, seed=0, return_state=False):
+def run_abm(params, n, i0, space, steps, seed=0, return_state=False,
+            checkpoint_dir=None, checkpoint_every=None, kill_at=None):
     radius, prob, move = params
     key = jax.random.PRNGKey(seed)
     pos = jax.random.uniform(key, (n, 3), minval=0.0, maxval=space)
@@ -89,7 +100,23 @@ def run_abm(params, n, i0, space, steps, seed=0, return_state=False):
         .op(infectious_time_op, name="infectious_time", phase="post")
         .observe_kinds("counts", n_kinds=3)   # S/I/R curves via the scan ys
     )
-    final, obs = sim.run_jit(steps)
+    if checkpoint_dir is None:
+        final, obs = sim.run_jit(steps)
+    else:
+        from repro.checkpoint import latest_step
+
+        on_chunk = None
+        if kill_at is not None:
+            def on_chunk(state):
+                if int(np.asarray(state.step).ravel()[0]) >= kill_at:
+                    os.kill(os.getpid(), signal.SIGKILL)
+
+        if latest_step(checkpoint_dir) is not None:
+            final, obs = sim.resume(checkpoint_dir, on_chunk=on_chunk)
+        else:
+            final, obs = sim.run_jit(
+                steps, checkpoint_dir=checkpoint_dir,
+                checkpoint_every=checkpoint_every, on_chunk=on_chunk)
     counts = np.asarray(obs["counts"])       # (steps, 3)
     if return_state:
         return counts, final
@@ -101,13 +128,27 @@ def main(argv=None):
     ap.add_argument("--fast", action="store_true", help="small population, no PSO")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny run for CI: build + step, skip the science bar")
+    ap.add_argument("--checkpoint-dir", default=None,
+                    help="persist the run here; rerun resumes from latest")
+    ap.add_argument("--checkpoint-every", type=int, default=3,
+                    help="steps between checkpoints (with --checkpoint-dir)")
+    ap.add_argument("--kill-at", type=int, default=None,
+                    help="SIGKILL after the first checkpoint at step >= N "
+                         "(CI kill-and-resume smoke)")
     args = ap.parse_args(argv)
+    if args.kill_at is not None and args.checkpoint_dir is None:
+        ap.error("--kill-at requires --checkpoint-dir")
 
     if args.smoke:
         counts, final = run_abm((3.24, 0.36, 6.2), 150, 6, 40.0, 10,
-                                return_state=True)
+                                return_state=True,
+                                checkpoint_dir=args.checkpoint_dir,
+                                checkpoint_every=args.checkpoint_every,
+                                kill_at=args.kill_at)
         assert counts.shape == (10, 3) and (counts.sum(axis=1) == 150).all()
         assert float(np.asarray(final.pool.get("t_inf")).max()) > 0.0
+        digest = hashlib.sha256(np.ascontiguousarray(counts).tobytes())
+        print(f"counts sha256={digest.hexdigest()}")
         print("smoke run OK (facade model built + stepped, counts recorded)")
         return 0.0
 

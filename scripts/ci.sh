@@ -18,6 +18,9 @@
 #     results/bench/fused_force.json.
 # The example smoke tier (scripts/examples.sh) runs each use-case example a
 # handful of steps through the `Simulation` model API (DESIGN.md §6).
+# The kill-and-resume tier (DESIGN.md §7) SIGKILLs a checkpointed run
+# mid-flight, resumes it from disk, and asserts the recovered observable
+# series hashes identically to an uninterrupted run.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -48,6 +51,29 @@ scripts/bench.sh
 echo
 echo "=== CI tier 3: example smoke (model API) ==="
 scripts/examples.sh
+
+echo
+echo "=== CI tier 4: kill-and-resume smoke (fault tolerance) ==="
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+CKPT_DIR="$(mktemp -d)"
+trap 'rm -rf "$CKPT_DIR"' EXIT
+SIR="examples/epidemiology_sir.py"
+REF_SHA=$(python "$SIR" --smoke | grep '^counts sha256=')
+echo "uninterrupted: $REF_SHA"
+# SIGKILL mid-run, right after the checkpoint at step >= 6 lands.
+if python "$SIR" --smoke --checkpoint-dir "$CKPT_DIR" --kill-at 6; then
+    echo "FAIL: --kill-at 6 run was expected to die mid-run" >&2
+    exit 1
+fi
+# Same command minus --kill-at resumes from the surviving checkpoint.
+RES_SHA=$(python "$SIR" --smoke --checkpoint-dir "$CKPT_DIR" \
+    | grep '^counts sha256=')
+echo "resumed:       $RES_SHA"
+if [ "$REF_SHA" != "$RES_SHA" ]; then
+    echo "FAIL: resumed observable series diverges from uninterrupted run" >&2
+    exit 1
+fi
+echo "kill-and-resume smoke OK (series bit-identical)"
 
 echo
 echo "CI gate passed."

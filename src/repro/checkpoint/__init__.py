@@ -1,1 +1,7 @@
-from .checkpoint import latest_step, list_steps, restore, save  # noqa: F401
+from .checkpoint import (  # noqa: F401
+    latest_step,
+    list_steps,
+    read_manifest,
+    restore,
+    save,
+)

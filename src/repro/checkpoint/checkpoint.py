@@ -4,11 +4,23 @@ BioDynaMo persists simulation state to ROOT files on an interval so a system
 failure loses at most one interval.  Here the same contract for both the ABM
 engine and LM training:
 
-  * ``save(dir, step, tree)`` — leaves to a .npz + a JSON manifest, written
-    atomically (tmp + rename), so a crash mid-write never corrupts the
-    latest-valid pointer;
-  * ``latest_step`` / ``restore`` — resume from the newest valid manifest;
+  * ``save(dir, step, tree, meta=...)`` — leaves to a .npz + a JSON manifest,
+    written atomically (tmp + rename), so a crash mid-write never corrupts
+    the latest-valid pointer;
+  * ``latest_step`` / ``restore`` — resume from the newest *valid* manifest.
+    Validity covers the array payload too (a manifest whose arrays.npz is
+    missing or truncated is skipped), so a corrupted checkpoint degrades to
+    the previous interval instead of crashing the resume;
+  * ``restore`` validates every leaf's shape AND dtype against the target
+    tree and fails loudly on missing arrays — a stale or foreign checkpoint
+    raises instead of silently corrupting simulation state;
   * old checkpoints are garbage-collected beyond ``keep``.
+
+Array keys are derived from pytree paths *injectively*: each path entry is
+tagged with its kind (dict key / sequence index / attribute / flattened
+index) and separators are escaped, so exotic trees like ``{"a/b": x, "a":
+{"b": y}}`` cannot collide.  ``save`` asserts injectivity and raises on any
+collision rather than silently dropping a leaf.
 
 On a real cluster each host writes its addressable shards and a quorum
 manifest (per-host-parallel); on this single-host container the arrays are
@@ -22,32 +34,85 @@ import json
 import os
 import shutil
 import tempfile
-from typing import Any, Optional, Tuple
+import zipfile
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import numpy as np
 
 MANIFEST = "manifest.json"
+ARRAYS = "arrays.npz"
 
 
-def _flatten_with_paths(tree) -> dict[str, np.ndarray]:
-    flat = {}
+# ---------------------------------------------------------------------------
+# Injective pytree-path → array-key mapping
+# ---------------------------------------------------------------------------
+
+
+def _escape(s: str) -> str:
+    """Escape the path separator (and the escape char itself) so joined keys
+    remain injective for components containing "/"."""
+    return s.replace("\\", "\\\\").replace("/", "\\s")
+
+
+def _path_key(path) -> str:
+    """One flat string per pytree path, injective by construction: every
+    entry carries a kind tag (``k:`` dict key by *repr* — ``1`` and ``"1"``
+    stay distinct — ``i:`` sequence index, ``a:`` attribute, ``x:``
+    flattened index) and separators are escaped before joining."""
+    tu = jax.tree_util
+    parts = []
+    for entry in path:
+        if isinstance(entry, tu.DictKey):
+            parts.append("k:" + _escape(repr(entry.key)))
+        elif isinstance(entry, tu.SequenceKey):
+            parts.append("i:" + str(entry.idx))
+        elif isinstance(entry, tu.GetAttrKey):
+            parts.append("a:" + _escape(entry.name))
+        elif isinstance(entry, tu.FlattenedIndexKey):
+            parts.append("x:" + str(entry.key))
+        else:  # unknown path-entry type: repr, still tagged + escaped
+            parts.append("r:" + _escape(repr(entry)))
+    return "/".join(parts)
+
+
+def _flatten_with_paths(tree) -> Dict[str, np.ndarray]:
+    flat: Dict[str, np.ndarray] = {}
     for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
-        key = "/".join(str(getattr(k, "key", getattr(k, "idx", getattr(k, "name", k)))) for k in path)
+        key = _path_key(path)
+        if key in flat:
+            raise ValueError(
+                f"pytree path key collision for {key!r} — two leaves map to "
+                f"one checkpoint array; this is a bug in the key escaping"
+            )
         flat[key] = np.asarray(leaf)
     return flat
 
 
-def save(directory: str, step: int, tree: Any, keep: int = 3) -> str:
-    """Atomically write checkpoint for ``step``; returns its path."""
+# ---------------------------------------------------------------------------
+# Save / GC / enumeration
+# ---------------------------------------------------------------------------
+
+
+def save(directory: str, step: int, tree: Any, keep: int = 3,
+         meta: Optional[Dict[str, Any]] = None) -> str:
+    """Atomically write checkpoint for ``step``; returns its path.
+
+    ``meta`` is an optional JSON-serializable dict stored in the manifest
+    (readable via :func:`read_manifest` without touching the arrays) — the
+    model API records the run's target step and observable row counts there.
+    """
     os.makedirs(directory, exist_ok=True)
     final = os.path.join(directory, f"step_{step:010d}")
     tmp = tempfile.mkdtemp(dir=directory, prefix=".tmp_ckpt_")
     try:
         flat = _flatten_with_paths(tree)
-        np.savez(os.path.join(tmp, "arrays.npz"), **flat)
+        np.savez(os.path.join(tmp, ARRAYS), **flat)
+        manifest = {"step": step, "n_arrays": len(flat), "complete": True}
+        if meta is not None:
+            manifest["meta"] = meta
         with open(os.path.join(tmp, MANIFEST), "w") as f:
-            json.dump({"step": step, "n_arrays": len(flat), "complete": True}, f)
+            json.dump(manifest, f)
         if os.path.exists(final):
             shutil.rmtree(final)
         os.rename(tmp, final)
@@ -75,14 +140,25 @@ def list_steps(directory: str) -> list[int]:
 
 
 def _valid(path: str) -> bool:
+    """A checkpoint directory is valid when its manifest parses as complete
+    AND its array payload is intact (zip central directory readable, member
+    count matching the manifest) — a truncated / corrupted arrays.npz makes
+    the whole step invalid so resume falls back to the previous interval."""
     mf = os.path.join(path, MANIFEST)
     if not os.path.exists(mf):
         return False
     try:
         with open(mf) as f:
-            return bool(json.load(f).get("complete"))
+            manifest = json.load(f)
+        if not manifest.get("complete"):
+            return False
+        with zipfile.ZipFile(os.path.join(path, ARRAYS)) as z:
+            n = manifest.get("n_arrays")
+            if n is not None and len(z.namelist()) != n:
+                return False
     except Exception:
         return False
+    return True
 
 
 def latest_step(directory: str) -> Optional[int]:
@@ -90,21 +166,69 @@ def latest_step(directory: str) -> Optional[int]:
     return steps[-1] if steps else None
 
 
-def restore(directory: str, like: Any, step: Optional[int] = None) -> Tuple[int, Any]:
-    """Restore into the structure of ``like`` (shapes/dtypes validated)."""
+def read_manifest(directory: str, step: Optional[int] = None) -> Tuple[int, Dict[str, Any]]:
+    """Return ``(step, manifest)`` for ``step`` (default: latest valid)."""
     step = latest_step(directory) if step is None else step
     if step is None:
         raise FileNotFoundError(f"no valid checkpoint under {directory}")
-    path = os.path.join(directory, f"step_{step:010d}", "arrays.npz")
+    with open(os.path.join(directory, f"step_{step:010d}", MANIFEST)) as f:
+        return step, json.load(f)
+
+
+# ---------------------------------------------------------------------------
+# Restore (strict: shape + dtype + presence validated against the target)
+# ---------------------------------------------------------------------------
+
+
+def _leaf_signature(leaf) -> Tuple[tuple, np.dtype]:
+    """(shape, dtype) of a target leaf — works for concrete arrays, python
+    scalars, and shape/dtype structs (jax.ShapeDtypeStruct)."""
+    shape = getattr(leaf, "shape", None)
+    if shape is None:
+        shape = np.shape(leaf)
+    dtype = getattr(leaf, "dtype", None)
+    if dtype is None:
+        dtype = np.asarray(leaf).dtype
+    return tuple(shape), np.dtype(dtype)
+
+
+def restore(directory: str, like: Any, step: Optional[int] = None) -> Tuple[int, Any]:
+    """Restore into the structure of ``like``.
+
+    Every leaf of ``like`` must be present in the checkpoint with identical
+    shape AND dtype; a missing or mismatched array raises with the offending
+    key named — a stale checkpoint (different model, capacity, or attr
+    schema) fails loudly here instead of corrupting the run it is restored
+    into.  Extra arrays in the checkpoint are ignored (``like`` may be a
+    sub-structure of what was saved).
+    """
+    step = latest_step(directory) if step is None else step
+    if step is None:
+        raise FileNotFoundError(f"no valid checkpoint under {directory}")
+    path = os.path.join(directory, f"step_{step:010d}", ARRAYS)
     data = np.load(path)
 
     flat_like, treedef = jax.tree_util.tree_flatten_with_path(like)
     leaves = []
     for kp, leaf in flat_like:
-        key = "/".join(str(getattr(k, "key", getattr(k, "idx", getattr(k, "name", k)))) for k in kp)
+        key = _path_key(kp)
+        if key not in data:
+            raise ValueError(
+                f"checkpoint step {step} under {directory} has no array for "
+                f"{key!r} — structure mismatch (stale or foreign checkpoint)"
+            )
         arr = data[key]
-        if tuple(arr.shape) != tuple(np.shape(leaf)):
-            raise ValueError(f"shape mismatch for {key}: {arr.shape} vs {np.shape(leaf)}")
+        want_shape, want_dtype = _leaf_signature(leaf)
+        if tuple(arr.shape) != want_shape:
+            raise ValueError(
+                f"shape mismatch for {key!r}: checkpoint has {arr.shape}, "
+                f"target expects {want_shape}"
+            )
+        if np.dtype(arr.dtype) != want_dtype:
+            raise ValueError(
+                f"dtype mismatch for {key!r}: checkpoint has {arr.dtype}, "
+                f"target expects {want_dtype}"
+            )
         leaves.append(arr)
     tree = jax.tree_util.tree_unflatten(treedef, leaves)
     return step, tree

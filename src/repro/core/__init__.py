@@ -67,7 +67,7 @@ from .forces import (
 )
 from .grid import GridIndex, GridSpec, build_index, candidate_neighbors, sort_agents, spec_for_space
 from .neighbors import NeighborContext
-from .schedule import Operation, OpContext, Scheduler
+from .schedule import HealthReport, Operation, OpContext, Scheduler
 
 __all__ = [
     "Simulation", "BuiltSimulation", "DistributedSimulation", "Observable",
@@ -84,5 +84,5 @@ __all__ = [
     "update_static_flags", "update_static_flags_celllist",
     "GridIndex", "GridSpec", "build_index", "candidate_neighbors", "sort_agents",
     "spec_for_space", "NeighborContext",
-    "Operation", "OpContext", "Scheduler",
+    "HealthReport", "Operation", "OpContext", "Scheduler",
 ]

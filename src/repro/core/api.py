@@ -44,6 +44,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import diffusion as dgrid
+from ..checkpoint import checkpoint as _ckpt
 from .agents import (
     attr_signature,
     canonicalize_attr,
@@ -235,6 +236,22 @@ class Simulation:
             )
         for name, arr in group_attrs.items():
             self._attr_schema.setdefault(name, attr_signature(arr))
+
+        # A declared capacity is a promise about pool sizing (headroom for
+        # division, distributed per-device bounds); blowing through it is a
+        # model error best reported at the registration site, naming the
+        # offending group — not later as a generic build() failure.
+        if self.capacity is not None:
+            n_before = sum(g.n for g in self._groups)
+            if n_before + n_here > int(self.capacity):
+                kinds = np.unique(np.asarray(jax.device_get(kind_arr)))
+                raise ValueError(
+                    f"add_agents: group of {n_here} agents "
+                    f"(kind {kinds.tolist()}) would bring the registered "
+                    f"population to {n_before + n_here}, beyond the declared "
+                    f"capacity {int(self.capacity)} "
+                    f"({n_before} already registered)"
+                )
 
         self._groups.append(
             _AgentGroup(n=n_here, position=position, diameter=diam,
@@ -491,15 +508,28 @@ class Simulation:
 
     # -------------------------------------------------------- execution
 
-    def run(self, n_steps: int, seed: Optional[int] = None):
-        """Build + run un-jitted (tracing/debugging); fresh initial state."""
-        return self.build(seed=seed).run(n_steps)
+    def run(self, n_steps: int, seed: Optional[int] = None, **run_kwargs):
+        """Build + run un-jitted (tracing/debugging); fresh initial state.
+        ``checkpoint_dir=`` / ``checkpoint_every=`` pass through to
+        :meth:`BuiltSimulation.run` for fault-tolerant runs."""
+        return self.build(seed=seed).run(n_steps, **run_kwargs)
 
-    def run_jit(self, n_steps: int, seed: Optional[int] = None):
+    def run_jit(self, n_steps: int, seed: Optional[int] = None, **run_kwargs):
         """Build + run under jit; fresh initial state.  For chunked runs
         (evolving state across calls) use ``build()`` and the
-        :class:`BuiltSimulation` methods."""
-        return self.build(seed=seed).run_jit(n_steps)
+        :class:`BuiltSimulation` methods.  ``checkpoint_dir=`` /
+        ``checkpoint_every=`` pass through for fault-tolerant runs."""
+        return self.build(seed=seed).run_jit(n_steps, **run_kwargs)
+
+    def resume(self, checkpoint_dir: str, seed: Optional[int] = None,
+               **resume_kwargs):
+        """Rebuild this model and finish an interrupted checkpointed run —
+        ``Simulation.resume(dir)`` alone recovers a killed
+        ``run(..., checkpoint_dir=dir)`` bit-exactly (the checkpoint's
+        manifest records the target step and interval).  The description
+        must match the one that wrote the checkpoint; shape/dtype
+        validation at restore enforces that."""
+        return self.build(seed=seed).resume(checkpoint_dir, **resume_kwargs)
 
     def distribute(self, mesh, dcfg, capacity: Optional[int] = None,
                    seed: Optional[int] = None) -> "DistributedSimulation":
@@ -661,6 +691,144 @@ def _slice_observed(
     return out
 
 
+# --------------------------------------------------------------- checkpoints
+
+#: Manifest meta format tag — bumped when the persisted payload layout
+#: changes, so ``resume`` rejects checkpoints from an incompatible writer
+#: instead of mis-restoring them.
+CKPT_FORMAT = "abm-run/1"
+
+
+def _step_of(state) -> int:
+    """The concrete absolute step counter (first device's on DistState —
+    all devices advance in lockstep)."""
+    return int(np.asarray(jax.device_get(state.step)).ravel()[0])
+
+
+def _concat_obs(acc: Dict[str, np.ndarray], new) -> Dict[str, np.ndarray]:
+    out = dict(acc)
+    for name, rows in new.items():
+        rows = np.asarray(jax.device_get(rows))
+        prev = out.get(name)
+        out[name] = rows if prev is None else np.concatenate([prev, rows], 0)
+    return out
+
+
+def _checkpointed_loop(
+    run_chunk: Callable[[int, Any], Tuple[Any, Dict[str, Array]]],
+    state,
+    n_steps: int,
+    *,
+    engine: str,
+    checkpoint_dir: str,
+    checkpoint_every: Optional[int],
+    keep: int,
+    on_chunk: Optional[Callable[[Any], None]],
+    obs_acc: Optional[Dict[str, np.ndarray]] = None,
+    target_step: Optional[int] = None,
+):
+    """Drive ``run_chunk`` in checkpoint-interval chunks up to the target.
+
+    The persisted tree is the *full run pytree* — simulation state (pool,
+    grids, RNG key data, step counter, health) plus every observable row
+    recorded so far — so a resume returns the identical final state AND the
+    identical complete series an uninterrupted run would have.  Chunking is
+    invisible to the dynamics: the per-step RNG folds the absolute step
+    counter, so k-step chunks compose bit-exactly into one long scan
+    (tests/test_checkpoint.py proves 2k straight == k + kill + resume + k).
+
+    An anchor checkpoint is written *before* the first chunk so a crash
+    inside it resumes from the true beginning; ``on_chunk(state)`` fires
+    after each save — the fault-injection tier kills the process there.
+    """
+    every = int(checkpoint_every) if checkpoint_every else int(n_steps)
+    if every <= 0:
+        raise ValueError(f"checkpoint_every must be positive, got {every}")
+    start = _step_of(state)
+    target = start + int(n_steps) if target_step is None else int(target_step)
+    acc = {k: np.asarray(v) for k, v in (obs_acc or {}).items()}
+
+    def save(st):
+        _ckpt.save(
+            checkpoint_dir,
+            _step_of(st),
+            {"state": st, "obs": acc},
+            keep=keep,
+            meta={
+                "format": CKPT_FORMAT,
+                "engine": engine,
+                "target_step": target,
+                "checkpoint_every": every,
+                "obs_rows": {k: int(v.shape[0]) for k, v in acc.items()},
+            },
+        )
+
+    save(state)
+    while _step_of(state) < target:
+        chunk = min(every, target - _step_of(state))
+        state, obs = run_chunk(chunk, state)
+        acc = _concat_obs(acc, obs)
+        save(state)
+        if on_chunk is not None:
+            on_chunk(state)
+    return state, {k: jnp.asarray(v) for k, v in acc.items()}
+
+
+def _resume_payload(checkpoint_dir: str, engine: str, proto_state, observables):
+    """Validate + restore the latest run checkpoint against this model.
+
+    Strict by construction: the ``like`` tree is the *built* initial state
+    (so every pool/grid/rng/health leaf is shape- and dtype-checked by
+    ``checkpoint.restore``) plus per-observable row buffers sized from the
+    manifest's ``obs_rows`` and typed from ``jax.eval_shape`` protos.  A
+    checkpoint from a different model, capacity, engine, or writer fails
+    loudly here instead of corrupting the resumed run.
+    """
+    step, manifest = _ckpt.read_manifest(checkpoint_dir)
+    meta = manifest.get("meta") or {}
+    if meta.get("format") != CKPT_FORMAT:
+        raise ValueError(
+            f"{checkpoint_dir} step {step} is not an ABM run checkpoint "
+            f"(manifest meta format {meta.get('format')!r}, want "
+            f"{CKPT_FORMAT!r}) — was it written by checkpoint.save directly?"
+        )
+    if meta.get("engine") != engine:
+        raise ValueError(
+            f"checkpoint at {checkpoint_dir} was written by the "
+            f"{meta.get('engine')!r} engine and cannot resume on {engine!r}"
+        )
+    live = [o for o in observables if o.frequency > 0]
+    protos = jax.eval_shape(
+        lambda s: {o.name: o.fn(s) for o in live}, proto_state
+    )
+    rows = meta.get("obs_rows") or {}
+    like_obs = {
+        name: jax.ShapeDtypeStruct(
+            (int(rows.get(name, 0)),) + tuple(p.shape), p.dtype
+        )
+        for name, p in protos.items()
+    }
+    # checkpoint.restore tolerates extra arrays (``like`` may be a
+    # sub-structure); a *resume* is stricter — the model must account for
+    # every persisted array, or it is not the model that wrote the run.
+    n_like = len(jax.tree_util.tree_leaves({"state": proto_state,
+                                            "obs": like_obs}))
+    n_saved = manifest.get("n_arrays")
+    if n_saved is not None and n_saved != n_like:
+        raise ValueError(
+            f"checkpoint at {checkpoint_dir} holds {n_saved} arrays but "
+            f"this model expects {n_like} — stale or foreign checkpoint"
+        )
+    _, payload = _ckpt.restore(
+        checkpoint_dir, {"state": proto_state, "obs": like_obs}, step=step
+    )
+    state = jax.tree.map(jnp.asarray, payload["state"])
+    acc = {k: np.asarray(v) for k, v in payload["obs"].items()}
+    return step, state, acc, int(meta["target_step"]), int(
+        meta.get("checkpoint_every") or 1
+    )
+
+
 @dataclasses.dataclass(frozen=True)
 class BuiltSimulation:
     """The compiled model: the explicit engine triple + observables.
@@ -708,13 +876,70 @@ class BuiltSimulation:
         )
         return final, obs
 
-    def run(self, n_steps: int, state: Optional[SimulationState] = None):
-        """Un-jitted ``lax.scan`` run → ``(final_state, {name: rows})``."""
-        return self._execute(n_steps, state, jit=False)
+    def run(self, n_steps: int, state: Optional[SimulationState] = None,
+            *, checkpoint_dir: Optional[str] = None,
+            checkpoint_every: Optional[int] = None, keep: int = 3,
+            on_chunk: Optional[Callable[[Any], None]] = None):
+        """Un-jitted ``lax.scan`` run → ``(final_state, {name: rows})``.
 
-    def run_jit(self, n_steps: int, state: Optional[SimulationState] = None):
-        """Jitted run → ``(final_state, {name: rows})``."""
-        return self._execute(n_steps, state, jit=True)
+        With ``checkpoint_dir=`` the run is chunked into
+        ``checkpoint_every``-step scans, persisting the full run pytree
+        (state + observable rows so far) after each — kill the process at
+        any point and :meth:`resume` finishes the run bit-exactly.
+        """
+        if checkpoint_dir is None:
+            return self._execute(n_steps, state, jit=False)
+        return self._run_checkpointed(
+            n_steps, state, False, checkpoint_dir, checkpoint_every, keep,
+            on_chunk,
+        )
+
+    def run_jit(self, n_steps: int, state: Optional[SimulationState] = None,
+                *, checkpoint_dir: Optional[str] = None,
+                checkpoint_every: Optional[int] = None, keep: int = 3,
+                on_chunk: Optional[Callable[[Any], None]] = None):
+        """Jitted run → ``(final_state, {name: rows})``.  Checkpointing as
+        in :meth:`run`; the chunks reuse one compiled scan per chunk size."""
+        if checkpoint_dir is None:
+            return self._execute(n_steps, state, jit=True)
+        return self._run_checkpointed(
+            n_steps, state, True, checkpoint_dir, checkpoint_every, keep,
+            on_chunk,
+        )
+
+    def _run_checkpointed(self, n_steps, state, jit, checkpoint_dir,
+                          checkpoint_every, keep, on_chunk,
+                          obs_acc=None, target_step=None):
+        state = self.state if state is None else state
+        return _checkpointed_loop(
+            lambda k, st: self._execute(k, st, jit=jit),
+            state, n_steps, engine="single",
+            checkpoint_dir=checkpoint_dir, checkpoint_every=checkpoint_every,
+            keep=keep, on_chunk=on_chunk, obs_acc=obs_acc,
+            target_step=target_step,
+        )
+
+    def resume(self, checkpoint_dir: str, *, jit: bool = True, keep: int = 3,
+               on_chunk: Optional[Callable[[Any], None]] = None):
+        """Finish an interrupted checkpointed run → the same
+        ``(final_state, {name: rows})`` the uninterrupted run returns.
+
+        Restores the latest valid checkpoint (strictly validated against
+        this model's built state — see :func:`_resume_payload`), then runs
+        the remaining ``target_step − restored_step`` iterations under the
+        recorded checkpoint interval.  Bit-exact: per-step RNG folds the
+        absolute step counter, so resumed dynamics are the straight-through
+        run's; the returned series is restored rows + new rows.
+        """
+        step, state, acc, target, every = _resume_payload(
+            checkpoint_dir, "single", self.state, self.observables
+        )
+        if target - step <= 0:
+            return state, {k: jnp.asarray(v) for k, v in acc.items()}
+        return self._run_checkpointed(
+            target - step, state, jit, checkpoint_dir, every, keep, on_chunk,
+            obs_acc=acc, target_step=target,
+        )
 
 
 @dataclasses.dataclass(frozen=True)
@@ -735,9 +960,27 @@ class DistributedSimulation:
     step: Callable[[Any], Any]
     observables: Tuple[Observable, ...] = ()
 
-    def run(self, n_steps: int, state=None):
-        """Step ``n_steps`` iterations → ``(final_state, {name: rows})``."""
+    def run(self, n_steps: int, state=None,
+            *, checkpoint_dir: Optional[str] = None,
+            checkpoint_every: Optional[int] = None, keep: int = 3,
+            on_chunk: Optional[Callable[[Any], None]] = None):
+        """Step ``n_steps`` iterations → ``(final_state, {name: rows})``.
+
+        ``checkpoint_dir=`` persists the full distributed run pytree (the
+        stacked ``DistState`` + observable rows) every ``checkpoint_every``
+        steps, exactly like ``BuiltSimulation.run`` — :meth:`resume`
+        finishes a killed run bit-exactly on the same mesh shape.
+        """
         state = self.state if state is None else state
+        if checkpoint_dir is None:
+            return self._run_chunk(n_steps, state)
+        return _checkpointed_loop(
+            self._run_chunk, state, n_steps, engine="dist",
+            checkpoint_dir=checkpoint_dir, checkpoint_every=checkpoint_every,
+            keep=keep, on_chunk=on_chunk,
+        )
+
+    def _run_chunk(self, n_steps: int, state):
         live = [o for o in self.observables if o.frequency > 0]
         rows: Dict[str, List[Array]] = {o.name: [] for o in live}
         # One host sync for the counter; it advances by exactly 1 per step,
@@ -759,3 +1002,20 @@ class DistributedSimulation:
                 proto = o.fn(state)
                 obs[o.name] = jnp.zeros((0,) + proto.shape, proto.dtype)
         return state, obs
+
+    def resume(self, checkpoint_dir: str, *, keep: int = 3,
+               on_chunk: Optional[Callable[[Any], None]] = None):
+        """Finish an interrupted distributed checkpointed run (see
+        ``BuiltSimulation.resume``).  The checkpoint's per-device shapes are
+        validated against this deployment's built state, so resuming on a
+        different mesh shape or capacity fails loudly."""
+        step, state, acc, target, every = _resume_payload(
+            checkpoint_dir, "dist", self.state, self.observables
+        )
+        if target - step <= 0:
+            return state, {k: jnp.asarray(v) for k, v in acc.items()}
+        return _checkpointed_loop(
+            self._run_chunk, state, target - step, engine="dist",
+            checkpoint_dir=checkpoint_dir, checkpoint_every=every, keep=keep,
+            on_chunk=on_chunk, obs_acc=acc, target_step=target,
+        )

@@ -79,7 +79,14 @@ from .behaviors import StepContext
 from .engine import EngineConfig, count_kinds
 from .grid import GridSpec, build_index_arrays
 from .neighbors import NeighborContext
-from .schedule import Operation, OpContext, Scheduler, apply_boundary
+from .schedule import (
+    HealthReport,
+    Operation,
+    OpContext,
+    Scheduler,
+    apply_boundary,
+    empty_health,
+)
 
 try:  # JAX >= 0.6
     from jax import shard_map as _shard_map
@@ -227,6 +234,7 @@ class DistState:
     halo_overflow: Array      # () i32
     halo_payload_bytes: Array   # () i32
     halo_baseline_bytes: Array  # () i32
+    health: HealthReport      # per-device telemetry (DESIGN.md §7)
 
 
 # ---------------------------------------------------------------------------
@@ -742,6 +750,7 @@ def init_dist_state(
         halo_overflow=zeros,
         halo_payload_bytes=zeros,
         halo_baseline_bytes=zeros,
+        health=jax.tree.map(lambda x: jnp.stack([x] * n_dev), empty_health()),
     )
 
 

@@ -35,7 +35,7 @@ from .agents import AgentPool
 from .behaviors import Behavior
 from .forces import ForceParams
 from .grid import GridSpec
-from .schedule import Scheduler
+from .schedule import HealthReport, Scheduler, empty_health
 
 Array = jax.Array
 
@@ -68,6 +68,9 @@ class EngineConfig:
     # Pallas interpret mode for the kernel force impls (CPU-container
     # default; set False on TPU hardware for the Mosaic lowering).
     kernel_interpret: bool = True
+    # Health-telemetry op frequency (DESIGN.md §7): fold saturation /
+    # non-finite detection into state.health every k steps (0 disables).
+    health_frequency: int = 1
 
 
 @jax.tree_util.register_dataclass
@@ -77,6 +80,7 @@ class SimulationState:
     grids: Dict[str, dgrid.DiffusionGrid]
     rng: Array
     step: Array  # i32 iteration counter
+    health: HealthReport  # saturation / corruption telemetry (DESIGN.md §7)
 
 
 def init_state(
@@ -89,6 +93,7 @@ def init_state(
         grids=dict(grids or {}),
         rng=jax.random.PRNGKey(seed),
         step=jnp.zeros((), jnp.int32),
+        health=empty_health(),
     )
 
 

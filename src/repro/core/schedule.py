@@ -69,6 +69,59 @@ GATES = ("cond", "mask")
 
 
 # ---------------------------------------------------------------------------
+# Health telemetry (fault-tolerance detection layer, DESIGN.md §7)
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class HealthReport:
+    """Saturation / corruption telemetry folded per step by the ``health``
+    op and carried through the scan as part of the simulation state.
+
+    Detection is pure and jit-safe (counters, never raises); *policy* runs
+    host-side between run chunks — ``launch/elastic.check_abm_state`` turns
+    a report into an :class:`~repro.launch.elastic.ElasticAction` (regrow
+    capacity, halt on corruption).  All fields are () i32 per device:
+
+    pool_overflow:       cumulative agents dropped by pool saturation
+                         (``AgentPool.overflow`` — spawn commits and
+                         migration inserts beyond free slots).
+    migrate_overflow:    cumulative migration-buffer overflow (distributed;
+                         0 single-node).
+    halo_overflow:       cumulative halo-buffer overflow (distributed;
+                         0 single-node).
+    cell_overflow_steps: steps on which the neighbor grid had an over-full
+                         cell (``GridIndex.overflowed``) — correctness is
+                         kept by the fused path's dense fallback, but a
+                         persistently over-full grid wants a larger
+                         ``max_per_cell``.
+    nonfinite_agents:    live agents with a non-finite position or float
+                         attribute on the *latest* inspected step.
+    nonfinite_steps:     cumulative steps with any non-finite live agent.
+    """
+
+    pool_overflow: Array
+    migrate_overflow: Array
+    halo_overflow: Array
+    cell_overflow_steps: Array
+    nonfinite_agents: Array
+    nonfinite_steps: Array
+
+
+def empty_health() -> HealthReport:
+    zero = jnp.zeros((), jnp.int32)
+    return HealthReport(
+        pool_overflow=zero,
+        migrate_overflow=zero,
+        halo_overflow=zero,
+        cell_overflow_steps=zero,
+        nonfinite_agents=zero,
+        nonfinite_steps=zero,
+    )
+
+
+# ---------------------------------------------------------------------------
 # Operation protocol
 # ---------------------------------------------------------------------------
 
@@ -186,6 +239,7 @@ class Scheduler:
             ops.append(static_flags_op(config))
         ops.append(diffusion_op(config))
         ops.append(age_op(config))
+        ops.append(health_op(config))
         return cls(config=config, ops=tuple(ops), fold_rng=fold_rng)
 
     # -- execution ----------------------------------------------------------
@@ -424,3 +478,52 @@ def age_op(config) -> Operation:
         return dataclasses.replace(state, pool=pool)
 
     return Operation("age", fn, phase="post")
+
+
+def health_op(config) -> Operation:
+    """Fold saturation / corruption telemetry into ``state.health`` (last
+    post standalone op — sees the fully updated step).
+
+    Duck-typed over both engines: the pool/grid signals are shared; the
+    distributed exchange counters (``migrate_overflow``/``halo_overflow``)
+    are read when the state carries them and fold to 0 single-node.
+    Detection is pure reductions (jit/scan/shard_map-safe, never raises);
+    the host inspects ``state.health`` between chunks and reacts there
+    (DESIGN.md §7).  ``EngineConfig.health_frequency`` gates it like any
+    §4.4.4 frequency (0 disables statically)."""
+
+    def fn(ctx: OpContext, state):
+        pool = state.pool
+        zero = jnp.zeros((), jnp.int32)
+        bad = ~jnp.all(jnp.isfinite(pool.position), axis=-1)
+        bad |= ~jnp.isfinite(pool.diameter) | ~jnp.isfinite(pool.age)
+        for v in pool.attrs.values():
+            if jnp.issubdtype(v.dtype, jnp.floating):
+                bad |= ~jnp.all(
+                    jnp.isfinite(v.reshape(v.shape[0], -1)), axis=-1
+                )
+        n_bad = jnp.sum((bad & pool.alive).astype(jnp.int32))
+        cell_ovf = (
+            ctx.index.overflowed.astype(jnp.int32)
+            if ctx.index is not None else zero
+        )
+        prev = state.health
+        report = HealthReport(
+            pool_overflow=jnp.asarray(pool.overflow, jnp.int32),
+            migrate_overflow=jnp.asarray(
+                getattr(state, "migrate_overflow", zero), jnp.int32
+            ),
+            halo_overflow=jnp.asarray(
+                getattr(state, "halo_overflow", zero), jnp.int32
+            ),
+            cell_overflow_steps=prev.cell_overflow_steps + cell_ovf,
+            nonfinite_agents=n_bad,
+            nonfinite_steps=prev.nonfinite_steps
+            + (n_bad > 0).astype(jnp.int32),
+        )
+        return dataclasses.replace(state, health=report)
+
+    return Operation(
+        "health", fn, phase="post",
+        frequency=config.health_frequency, gate="cond",
+    )

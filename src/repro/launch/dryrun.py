@@ -400,6 +400,8 @@ def lower_teraagent(mesh):
         prev_ids=sds((n_dev, len(axes), 2, halo_cap), jnp.int32),
         scale=sds((n_dev,), jnp.float32),
     )
+    from repro.core.schedule import HealthReport
+
     state = DistState(
         pool=pool, grids={}, codec=codec,
         rng=sds((n_dev, 2), jnp.uint32),
@@ -408,6 +410,14 @@ def lower_teraagent(mesh):
         halo_overflow=sds((n_dev,), jnp.int32),
         halo_payload_bytes=sds((n_dev,), jnp.int32),
         halo_baseline_bytes=sds((n_dev,), jnp.int32),
+        health=HealthReport(
+            pool_overflow=sds((n_dev,), jnp.int32),
+            migrate_overflow=sds((n_dev,), jnp.int32),
+            halo_overflow=sds((n_dev,), jnp.int32),
+            cell_overflow_steps=sds((n_dev,), jnp.int32),
+            nonfinite_agents=sds((n_dev,), jnp.int32),
+            nonfinite_steps=sds((n_dev,), jnp.int32),
+        ),
     )
     from jax.sharding import NamedSharding, PartitionSpec as P
 

@@ -527,12 +527,13 @@ def scenario_facade_parity():
     # Facade: the model declared once, deployed on the mesh.
     sim = (
         Simulation(space=(0.0, space), cell_size=2.0, boundary="open",
-                   dt=0.05, max_per_cell=32, seed=3, sort_frequency=4,
-                   capacity=256)
+                   dt=0.05, max_per_cell=32, seed=3, sort_frequency=4)
         .add_agents(n, position=pos, diameter=1.6)
         .mechanics(ForceParams())
     )
-    dsim = sim.distribute(mesh, dcfg)
+    # capacity is per DEVICE and a deployment choice → passed at distribute()
+    # (declaring capacity=256 on the model would reject the 300-agent group).
+    dsim = sim.distribute(mesh, dcfg, capacity=256)
     f_state, _ = dsim.run(n_steps)
 
     # Hand-wired: the explicit layer the facade must compile onto.
@@ -558,12 +559,12 @@ def scenario_facade_parity():
     # Substances: global description → per-device local grids that step.
     sim2 = (
         Simulation(space=(0.0, space), cell_size=2.0, boundary="open",
-                   dt=0.05, max_per_cell=32, capacity=256, sort_frequency=4)
+                   dt=0.05, max_per_cell=32, sort_frequency=4)
         .add_agents(n, position=pos, diameter=1.6)
         .add_substance("cue", diffusion=0.5, resolution=16)
         .mechanics(ForceParams())
     )
-    dsim2 = sim2.distribute(mesh, dcfg)
+    dsim2 = sim2.distribute(mesh, dcfg, capacity=256)
     assert dsim2.state.grids["cue"].concentration.shape == (4, 8, 8, 16)
     s2, _ = dsim2.run(2)
     assert np.isfinite(np.asarray(s2.grids["cue"].concentration)).all()
@@ -606,6 +607,168 @@ def scenario_multipod():
     print("multipod OK")
 
 
+def scenario_health_cell_overflow():
+    """DESIGN.md §7 telemetry under the distributed scheduler: an injected
+    over-full cell must flip ``index.overflowed`` on exactly the device
+    hosting it — surfacing as that device's ``health.cell_overflow_steps``
+    through the shard_mapped health op — while the fused force's lax.cond
+    dense branch keeps the trajectory bit-exact against the dense path."""
+    mesh, dcfg, ecfg, pos, n = _force_only_setup("int16")
+    spec = dcfg.grid_spec(box_size=2.0, max_per_cell=4)
+    ecfg = dataclasses.replace(ecfg, spec=spec, dt=0.01)
+    rng = np.random.default_rng(9)
+    # 12 agents inside the single [4,6)³ cell of device (0,0) — interior
+    # (beyond halo_width of every device boundary), so only device 0 sees it.
+    blob = rng.uniform(4.2, 5.8, (12, 3)).astype(np.float32)
+    pos = np.concatenate([pos, blob]).astype(np.float32)
+
+    state0 = init_dist_state(dcfg, capacity=256, positions=pos, diameter=1.6)
+    finals = {}
+    for name, cfg in (("dense", ecfg),
+                      ("fused_fb", _fused_ecfg(ecfg, fallback=True))):
+        step = make_distributed_step(mesh, dcfg, cfg)
+        s = state0
+        for _ in range(3):
+            s = step(s)
+        finals[name] = s
+    np.testing.assert_allclose(
+        np.asarray(finals["dense"].pool.position),
+        np.asarray(finals["fused_fb"].pool.position), atol=0.0,
+    )
+    for s in finals.values():
+        ovf = np.asarray(s.health.cell_overflow_steps)
+        assert ovf[0] == 3, f"device 0 should flag all 3 steps, got {ovf}"
+        assert (ovf[1:] == 0).all(), f"only device 0 hosts the blob: {ovf}"
+        assert np.asarray(s.health.nonfinite_agents).sum() == 0
+    print(f"per-device cell_overflow_steps: {ovf}")
+    print("distributed cell-overflow health OK")
+
+
+def scenario_facade_resume():
+    """Bit-exact kill-and-resume on the distributed engine: n steps straight
+    == k + process death + ``DistributedSimulation.resume`` — final stacked
+    DistState AND the observable series, through the facade alone."""
+    import shutil
+    import tempfile
+
+    from repro.core import ForceParams, Simulation
+
+    space = 32.0
+    mesh = _mesh((2, 2), ("data", "model"))
+    dcfg = DomainConfig(
+        mesh_axes=("data", "model"), axis_sizes=(2, 2), extent=space / 2,
+        halo_width=2.0, halo_capacity=96, migrate_capacity=48, depth=space,
+        halo_codec="int16",
+    )
+    rng = np.random.default_rng(11)
+    pos = rng.uniform(1.0, space - 1.0, (200, 3)).astype(np.float32)
+    kinds = rng.integers(0, 2, 200)
+
+    def build():
+        return (
+            Simulation(space=(0.0, space), cell_size=2.0, boundary="open",
+                       dt=0.05, max_per_cell=32, seed=3, sort_frequency=4,
+                       capacity=256)
+            .add_agents(position=pos, diameter=1.6, kind=kinds)
+            .mechanics(ForceParams())
+            .observe_kinds("counts", n_kinds=2)
+        ).distribute(mesh, dcfg)
+
+    straight_final, straight_obs = build().run(12)
+
+    class Die(Exception):
+        pass
+
+    def killer(state):
+        if int(np.asarray(state.step).ravel()[0]) >= 6:
+            raise Die
+
+    d = tempfile.mkdtemp(prefix="dist_resume_")
+    try:
+        try:
+            build().run(12, checkpoint_dir=d, checkpoint_every=3,
+                        on_chunk=killer)
+            raise AssertionError("killer never fired")
+        except Die:
+            pass
+        resumed_final, resumed_obs = build().resume(d)
+        np.testing.assert_array_equal(
+            np.asarray(straight_obs["counts"]),
+            np.asarray(resumed_obs["counts"]),
+        )
+        jax.tree.map(
+            lambda a, b: np.testing.assert_array_equal(
+                np.asarray(a), np.asarray(b)),
+            straight_final, resumed_final,
+        )
+    finally:
+        shutil.rmtree(d, ignore_errors=True)
+    print("distributed facade resume bit-exact OK")
+
+
+def scenario_elastic_regrow():
+    """Distributed elastic regrowth: an undersized per-device pool saturates
+    under cell division; run_elastic_distributed restores the pre-chunk
+    checkpoint into grown pools (+ scaled halo/migrate buffers) and replays
+    to completion with zero drops, deterministically."""
+    import shutil
+    import tempfile
+
+    from repro.core import Simulation
+    from repro.core.behaviors import cell_division
+    from repro.launch import elastic
+
+    space = 32.0
+    mesh = _mesh((2, 2), ("data", "model"))
+    dcfg = DomainConfig(
+        mesh_axes=("data", "model"), axis_sizes=(2, 2), extent=space / 2,
+        halo_width=3.0, halo_capacity=64, migrate_capacity=32, depth=space,
+        halo_codec="none",
+    )
+    rng = np.random.default_rng(5)
+    pos = rng.uniform(3.0, space - 3.0, (48, 3)).astype(np.float32)
+
+    def build():
+        return (
+            Simulation(space=(0.0, space), cell_size=3.0, boundary="open",
+                       dt=1.0, max_per_cell=32, seed=2, capacity=256)
+            .add_agents(position=pos, diameter=2.0)
+            .use(cell_division(0.5))
+            .observe("pop", lambda s: s.pool.alive.sum().astype(jnp.int32))
+        )
+
+    dirs = [tempfile.mkdtemp(prefix="dist_regrow_") for _ in range(2)]
+    try:
+        runs = [
+            elastic.run_elastic_distributed(
+                build(), mesh, dcfg, 4, d, checkpoint_every=2,
+                capacity=32, max_regrows=4,
+            )
+            for d in dirs
+        ]
+        (f1, o1, g1), (f2, o2, g2) = runs
+        assert g1 >= 1, f"expected at least one regrow, got {g1}"
+        assert f1.pool.position.shape[1] > 32
+        assert int(np.asarray(f1.pool.overflow).sum()) == 0
+        assert int(np.asarray(f1.health.pool_overflow).sum()) == 0
+        # Zero drops: final global population matches the recorded series.
+        assert int(np.asarray(o1["pop"])[-1]) == int(
+            np.asarray(f1.pool.alive).sum())
+        assert g2 == g1
+        np.testing.assert_array_equal(np.asarray(o1["pop"]),
+                                      np.asarray(o2["pop"]))
+        jax.tree.map(
+            lambda a, b: np.testing.assert_array_equal(
+                np.asarray(a), np.asarray(b)),
+            f1, f2,
+        )
+    finally:
+        for d in dirs:
+            shutil.rmtree(d, ignore_errors=True)
+    print(f"distributed elastic regrowth OK (regrows={g1}, "
+          f"final pop={int(np.asarray(o1['pop'])[-1])})")
+
+
 if __name__ == "__main__":
     which = sys.argv[1] if len(sys.argv) > 1 else "all"
     table = {
@@ -624,6 +787,9 @@ if __name__ == "__main__":
         "scheduler_parity": scenario_scheduler_parity,
         "static_flags": scenario_static_flags_distributed,
         "bounds": scenario_bounds_honored,
+        "health_cell_overflow": scenario_health_cell_overflow,
+        "facade_resume": scenario_facade_resume,
+        "elastic_regrow": scenario_elastic_regrow,
     }
     if which == "all":
         for name, fn in table.items():

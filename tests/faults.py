@@ -1,0 +1,127 @@
+"""Fault-injection harness (DESIGN.md §7).
+
+Small, composable injectors used by tests/test_faults.py (and reusable from
+a REPL when reproducing an incident):
+
+  * checkpoint-store faults — corrupt or truncate a written checkpoint, or
+    leave a half-written temp directory behind, the on-disk states a crash
+    mid-``save`` can produce;
+  * state faults — a scheduler op that overwrites an agent's position with
+    NaN at a chosen step (numerical corruption à la an unstable dt), and
+    model builders whose dynamics saturate a deliberately undersized pool
+    or cell list.
+
+Injectors never reach into private engine state: checkpoint faults act on
+the files, state faults ride the public custom-op / facade surfaces — the
+same paths a real failure would take.
+"""
+
+import dataclasses
+import json
+import os
+
+import numpy as np
+
+
+# ------------------------------------------------------------ on-disk faults
+
+def ckpt_dir(directory: str, step: int) -> str:
+    return os.path.join(directory, f"step_{step:010d}")
+
+
+def corrupt_manifest(directory: str, step: int) -> None:
+    """Overwrite the manifest with truncated garbage (crash mid-rename on a
+    non-atomic filesystem, cosmic-ray bitrot, ...)."""
+    with open(os.path.join(ckpt_dir(directory, step), "manifest.json"), "w") as f:
+        f.write('{"step": ')
+
+
+def truncate_arrays(directory: str, step: int, keep_bytes: int = 64) -> None:
+    """Cut the array payload short — the zip central directory (written
+    last) is lost, exactly what a crash mid-write produces."""
+    path = os.path.join(ckpt_dir(directory, step), "arrays.npz")
+    with open(path, "rb") as f:
+        head = f.read(keep_bytes)
+    with open(path, "wb") as f:
+        f.write(head)
+
+
+def delete_arrays(directory: str, step: int) -> None:
+    os.remove(os.path.join(ckpt_dir(directory, step), "arrays.npz"))
+
+
+def leftover_tmp_dir(directory: str) -> str:
+    """Materialize the half-written temp directory a killed ``save`` leaves
+    behind (payload present, no manifest yet) — loaders must never see it
+    as a checkpoint."""
+    tmp = os.path.join(directory, ".tmp_ckpt_killed")
+    os.makedirs(tmp, exist_ok=True)
+    np.savez(os.path.join(tmp, "arrays.npz"), x=np.zeros(3))
+    return tmp
+
+
+def fake_complete_manifest(directory: str, step: int) -> str:
+    """A manifest claiming completeness with no payload at all (backup tool
+    half-restored a checkpoint) — payload validation must reject it."""
+    d = ckpt_dir(directory, step)
+    os.makedirs(d, exist_ok=True)
+    with open(os.path.join(d, "manifest.json"), "w") as f:
+        json.dump({"step": step, "n_arrays": 1, "complete": True}, f)
+    return d
+
+
+# -------------------------------------------------------------- state faults
+
+def nan_bomb_op(at_step: int):
+    """A scheduler op that overwrites agent 0's x-position with NaN from
+    ``at_step`` on — registered via ``Simulation.op`` so detection is
+    exercised through the public pipeline."""
+    import jax.numpy as jnp
+
+    def nan_bomb(ctx, state):
+        pos = state.pool.position
+        hit = state.step >= at_step
+        pos = pos.at[0, 0].set(jnp.where(hit, jnp.nan, pos[0, 0]))
+        return dataclasses.replace(state, pool=state.pool.replace(position=pos))
+
+    return nan_bomb
+
+
+def dividing_sim(capacity: int, n0: int = 24, seed: int = 7,
+                 division_probability: float = 0.4, space: float = 40.0):
+    """A facade model whose population roughly ×1.4s per step — any fixed
+    capacity saturates within a few steps, tripping ``pool.overflow``."""
+    from repro.core.api import Simulation
+    from repro.core.behaviors import cell_division
+
+    rng = np.random.RandomState(seed)
+    pos = rng.uniform(5.0, space - 5.0, (n0, 3)).astype(np.float32)
+    return (
+        Simulation(space=space, cell_size=4.0, boundary="closed", dt=1.0,
+                   capacity=capacity, seed=seed)
+        .add_agents(position=pos, diameter=3.0)
+        .use(cell_division(division_probability))
+        .observe("pop", lambda s: s.pool.alive.sum().astype(np.int32))
+    )
+
+
+def overfull_cell_sim(max_per_cell: int = 4, impl: str = "fused",
+                      overflow_fallback: bool = True, space: float = 20.0):
+    """A facade model with 12 agents blobbed inside one neighbor-grid cell
+    and a deliberately tiny ``max_per_cell`` — the cell list overflows every
+    step, exercising the dense-fallback ``lax.cond`` and the health flag."""
+    from repro.core import ForceParams
+    from repro.core.api import Simulation
+
+    rng = np.random.default_rng(9)
+    spread = rng.uniform(2.0, space - 2.0, (30, 3)).astype(np.float32)
+    # All 12 inside the single [8, 10)³ grid cell — guaranteed overflow.
+    blob = rng.uniform(8.2, 9.8, (12, 3)).astype(np.float32)
+    pos = np.concatenate([spread, blob])
+    return (
+        Simulation(space=space, cell_size=2.0, boundary="closed", dt=0.01,
+                   capacity=64, max_per_cell=max_per_cell, seed=3)
+        .add_agents(position=pos, diameter=1.6)
+        .mechanics(ForceParams(), impl=impl,
+                   overflow_fallback=overflow_fallback)
+    )

@@ -253,11 +253,24 @@ def test_positions_outside_space_raise():
         sim.add_agents(position=np.full((3, 3), 12.0, np.float32))
 
 
-def test_capacity_overflow_raises():
+def test_capacity_overflow_raises_at_registration():
+    """Registering past the declared capacity fails AT add_agents, naming
+    the offending group's kind and the counts — not later as a generic
+    build() error (regression: it used to surface only at build)."""
     sim = Simulation(space=20.0, cell_size=2.0, capacity=4)
-    sim.add_agents(position=_positions(8) * 0.3)
-    with pytest.raises(ValueError, match="capacity"):
-        sim.build()
+    with pytest.raises(ValueError, match=r"kind \[7\].*population to 8.*"
+                                         r"capacity 4"):
+        sim.add_agents(position=_positions(8) * 0.3, kind=7)
+    # The rejected group was not registered — a fitting one still works.
+    sim.add_agents(position=_positions(3) * 0.3)
+    assert sim.build().state.pool.capacity == 4
+
+
+def test_capacity_overflow_names_cumulative_counts():
+    sim = Simulation(space=20.0, cell_size=2.0, capacity=10)
+    sim.add_agents(position=_positions(6) * 0.3, kind=0)
+    with pytest.raises(ValueError, match=r"6 already registered"):
+        sim.add_agents(position=_positions(6, seed=1) * 0.3, kind=1)
 
 
 def test_multiple_groups_concatenate_with_headroom():

@@ -1,0 +1,238 @@
+"""Checkpoint/resume contract (DESIGN.md §7, referenced by launch/elastic.py).
+
+Three layers:
+  * the checkpoint store itself — atomic save, injective pytree-path keys,
+    strict shape/dtype/presence validation on restore, keep-GC;
+  * the facade's fault-tolerant run — ``run(..., checkpoint_dir=)`` +
+    ``Simulation.resume`` must be *bit-exact* against an uninterrupted run,
+    for the final state AND every observable series;
+  * failure-mode behavior lives in tests/test_faults.py (corrupt payloads,
+    mid-write leftovers, foreign checkpoints).
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint import (
+    latest_step,
+    list_steps,
+    read_manifest,
+    restore,
+    save,
+)
+
+
+# ------------------------------------------------------------------- store
+
+def test_roundtrip_with_meta(tmp_path):
+    tree = {"a": np.arange(6, dtype=np.int32).reshape(2, 3),
+            "b": {"c": np.float32(1.5)}}
+    save(str(tmp_path), 7, tree, meta={"engine": "single", "target_step": 20})
+    step, back = restore(str(tmp_path), tree)
+    assert step == 7
+    np.testing.assert_array_equal(back["a"], tree["a"])
+    step, manifest = read_manifest(str(tmp_path))
+    assert step == 7
+    assert manifest["meta"] == {"engine": "single", "target_step": 20}
+
+
+def test_injective_keys_slash_in_dict_key(tmp_path):
+    """Regression: the old `"/".join(str(k))` scheme collapsed
+    ``{"a/b": x}`` and ``{"a": {"b": y}}`` onto one array key, silently
+    dropping a leaf.  Keys are now type-tagged and escaped — both leaves
+    round-trip."""
+    tree = {"a/b": np.float32(1.0), "a": {"b": np.float32(2.0)}}
+    save(str(tmp_path), 1, tree)
+    _, back = restore(str(tmp_path), tree)
+    assert float(back["a/b"]) == 1.0
+    assert float(back["a"]["b"]) == 2.0
+
+
+def test_path_key_tags_make_entry_types_distinct():
+    """dict key 1, dict key "1", sequence index 1, flattened index 1, and
+    attribute "1" must all map to different array keys (jax itself forbids
+    mixed-type dict keys, but different *entry kinds* can meet at the same
+    depth across subtrees)."""
+    import jax
+
+    from repro.checkpoint.checkpoint import _path_key
+
+    tu = jax.tree_util
+    keys = {
+        _path_key((tu.DictKey(1),)),
+        _path_key((tu.DictKey("1"),)),
+        _path_key((tu.SequenceKey(1),)),
+        _path_key((tu.FlattenedIndexKey(1),)),
+        _path_key((tu.GetAttrKey("1"),)),
+    }
+    assert len(keys) == 5, keys
+
+
+def test_missing_leaf_raises_stale(tmp_path):
+    save(str(tmp_path), 1, {"x": np.zeros(3, np.float32)})
+    with pytest.raises(ValueError, match="stale or foreign"):
+        restore(str(tmp_path), {"y": np.zeros(3, np.float32)})
+
+
+def test_dtype_mismatch_raises(tmp_path):
+    save(str(tmp_path), 1, {"x": np.zeros(3, np.float32)})
+    with pytest.raises(ValueError, match="dtype mismatch"):
+        restore(str(tmp_path), {"x": np.zeros(3, np.int32)})
+
+
+def test_shape_mismatch_raises(tmp_path):
+    save(str(tmp_path), 1, {"x": np.zeros(3, np.float32)})
+    with pytest.raises(ValueError, match="shape mismatch"):
+        restore(str(tmp_path), {"x": np.zeros(4, np.float32)})
+
+
+def test_extra_arrays_ignored(tmp_path):
+    """``like`` may be a sub-structure of what was saved (the facade
+    restores state even if the writer recorded more observables)."""
+    save(str(tmp_path), 1, {"x": np.ones(2, np.float32),
+                            "extra": np.zeros(5)})
+    _, back = restore(str(tmp_path), {"x": np.ones(2, np.float32)})
+    np.testing.assert_array_equal(back["x"], np.ones(2, np.float32))
+
+
+def test_latest_step_skips_incomplete_manifest(tmp_path):
+    import json, os
+
+    tree = {"x": np.zeros(2, np.float32)}
+    save(str(tmp_path), 3, tree)
+    save(str(tmp_path), 6, tree)
+    # Flip step 6's manifest to incomplete (a crash between payload write
+    # and manifest finalization on a non-atomic filesystem).
+    mf = os.path.join(str(tmp_path), "step_0000000006", "manifest.json")
+    with open(mf) as f:
+        manifest = json.load(f)
+    manifest["complete"] = False
+    with open(mf, "w") as f:
+        json.dump(manifest, f)
+    assert latest_step(str(tmp_path)) == 3
+    step, back = restore(str(tmp_path), tree)
+    assert step == 3
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    steps=st.lists(st.integers(0, 40), min_size=1, max_size=10),
+    keep=st.integers(1, 5),
+)
+def test_gc_keeps_exactly_last_k(steps, keep):
+    """Property: after saving any step sequence with ``keep=k``, exactly the
+    k highest steps survive (GC is by step order, not write order).  Own
+    tempdir: the hypothesis fallback engine does not inject fixtures."""
+    import shutil, tempfile
+
+    d = tempfile.mkdtemp(prefix="ckpt_gc_")
+    steps = list(dict.fromkeys(steps))          # dedupe, keep draw order
+    try:
+        tree = {"x": np.zeros(2, np.float32)}
+        for s in steps:
+            save(d, s, tree, keep=keep)
+        assert list_steps(d) == sorted(steps)[-keep:]
+    finally:
+        shutil.rmtree(d, ignore_errors=True)
+
+
+# --------------------------------------------------- facade bit-exact resume
+
+SPACE = 30.0
+
+
+def _model(tmp=None):
+    from repro.core import ForceParams
+    from repro.core.api import Simulation
+    from repro.core.behaviors import brownian_motion
+
+    rng = np.random.RandomState(11)
+    pos = rng.uniform(3.0, SPACE - 3.0, (40, 3)).astype(np.float32)
+    return (
+        Simulation(space=SPACE, cell_size=3.0, boundary="closed", dt=0.05,
+                   capacity=64, seed=5, sort_frequency=4)
+        .add_agents(position=pos, diameter=2.5, kind=rng.randint(0, 2, 40))
+        .mechanics(ForceParams())
+        .observe_kinds("counts", n_kinds=2)
+        .observe("com", lambda s: s.pool.position[s.pool.alive.argmax()],
+                 frequency=3)
+    )
+
+
+def _assert_trees_equal(a, b):
+    import jax
+
+    jax.tree.map(
+        lambda x, y: np.testing.assert_array_equal(np.asarray(x),
+                                                   np.asarray(y)),
+        a, b,
+    )
+
+
+@pytest.mark.parametrize("jit", [True, False])
+def test_resume_bit_exact_single_node(tmp_path, jit):
+    """2k steps straight == k steps + process death + resume + k steps —
+    final state AND every observable series (freq-1 and freq-3), both
+    engine entry points.  The interrupted run is cut by an exception from
+    ``on_chunk`` (standing in for SIGKILL — the checkpoint is already on
+    disk when the callback fires); resume rebuilds from the description
+    alone."""
+    straight_final, straight_obs = (
+        _model().run_jit(12) if jit else _model().run(12)
+    )
+
+    class Die(Exception):
+        pass
+
+    def killer(state):
+        import jax
+
+        if int(jax.device_get(state.step)) >= 6:
+            raise Die
+
+    d = str(tmp_path / "ckpt")
+    with pytest.raises(Die):
+        run = _model().run_jit if jit else _model().run
+        run(12, checkpoint_dir=d, checkpoint_every=3, on_chunk=killer)
+
+    resumed_final, resumed_obs = _model().resume(d, jit=jit)
+    _assert_trees_equal(straight_final, resumed_final)
+    assert set(straight_obs) == set(resumed_obs)
+    for name in straight_obs:
+        np.testing.assert_array_equal(
+            np.asarray(straight_obs[name]), np.asarray(resumed_obs[name]),
+            err_msg=name,
+        )
+
+
+def test_resume_completed_run_returns_series(tmp_path):
+    """Resume of an already-finished run re-reads the checkpoint and hands
+    back the complete series without stepping."""
+    d = str(tmp_path / "ckpt")
+    final, obs = _model().run_jit(6, checkpoint_dir=d, checkpoint_every=2)
+    final2, obs2 = _model().resume(d)
+    _assert_trees_equal(final, final2)
+    for name in obs:
+        np.testing.assert_array_equal(np.asarray(obs[name]),
+                                      np.asarray(obs2[name]), err_msg=name)
+
+
+def test_resume_rejects_plain_checkpoint(tmp_path):
+    """A directory written by checkpoint.save directly (no run meta) is not
+    resumable — the facade refuses instead of guessing a target step."""
+    built = _model().build()
+    save(str(tmp_path), 4, {"state": built.state, "obs": {}})
+    with pytest.raises(ValueError, match="not an ABM run checkpoint"):
+        _model().resume(str(tmp_path))
+
+
+def test_resume_rejects_wrong_capacity(tmp_path):
+    """A checkpoint from a different capacity fails loudly at restore
+    (shape validation), not as silent state corruption."""
+    d = str(tmp_path / "ckpt")
+    _model().run_jit(4, checkpoint_dir=d, checkpoint_every=2)
+    bigger = _model()
+    bigger.capacity = 128
+    with pytest.raises(ValueError, match="shape mismatch"):
+        bigger.resume(d)

@@ -128,6 +128,35 @@ def test_distributed_runs_static_flag_detection():
 
 
 @pytest.mark.subprocess
+def test_health_attributes_cell_overflow_to_device():
+    """DESIGN.md §7: an injected over-full cell flips ``index.overflowed``
+    only on the device that owns it, the dense fallback stays bit-exact,
+    and the health op folds the flag into per-device counters."""
+    out = _run("health_cell_overflow")
+    assert "distributed cell-overflow health OK" in out
+
+
+@pytest.mark.subprocess
+@pytest.mark.slow
+def test_facade_resume_bit_exact():
+    """Kill-and-resume through Simulation.distribute: k + kill + resume + k
+    reproduces the uninterrupted 2k-step run bit-for-bit — state and the
+    full observable series."""
+    out = _run("facade_resume")
+    assert "distributed facade resume bit-exact OK" in out
+
+
+@pytest.mark.subprocess
+@pytest.mark.slow
+def test_elastic_regrowth_distributed():
+    """Overflow-driven regrowth under the distributed engine: saturated
+    per-device pools grow, no agents are dropped, and the run is
+    deterministic."""
+    out = _run("elastic_regrow")
+    assert "distributed elastic regrowth OK" in out
+
+
+@pytest.mark.subprocess
 def test_distributed_honors_engine_bounds():
     """Regression: the distributed step ignored EngineConfig.min_bound/
     max_bound/boundary for non-decomposed dims (hardcoded closed [0, depth])."""

@@ -144,11 +144,31 @@ def test_spec_for_axes_divisibility():
 
 
 def test_elastic_policies():
+    from repro.core.schedule import HealthReport
     from repro.launch import elastic
 
-    act = elastic.check_abm_state(0, 0, 0)
-    assert act.kind == "continue"
-    act = elastic.check_abm_state(5, 0, 0)
+    def report(**kw):
+        fields = dict(pool_overflow=0, migrate_overflow=0, halo_overflow=0,
+                      cell_overflow_steps=0, nonfinite_agents=0,
+                      nonfinite_steps=0)
+        fields.update(kw)
+        return HealthReport(
+            **{k: np.asarray(v, np.int32) for k, v in fields.items()})
+
+    assert elastic.check_abm_state(report()).kind == "continue"
+    act = elastic.check_abm_state(report(pool_overflow=5))
     assert act.kind == "grow_capacity" and act.grow_factor == 2.0
+    act = elastic.check_abm_state(report(halo_overflow=2), grow_factor=1.5)
+    assert act.kind == "grow_capacity" and act.grow_factor == 1.5
+    # NaNs outrank saturation — growing cannot fix numerical corruption.
+    act = elastic.check_abm_state(
+        report(pool_overflow=5, nonfinite_agents=1, nonfinite_steps=1))
+    assert act.kind == "halt"
+    # Cell-list overflow alone is a perf signal (dense fallback is exact).
+    assert elastic.check_abm_state(
+        report(cell_overflow_steps=3)).kind == "continue"
+    # Duck-typing: per-device stacked counters sum across devices.
+    assert elastic.check_abm_state(
+        report(migrate_overflow=np.zeros(4, np.int32))).kind == "continue"
     assert elastic.surviving_mesh_shape(3, 4, 16) is None
     assert elastic.surviving_mesh_shape(10, 4, 16) == (2, 16)
