@@ -20,13 +20,21 @@ is not representative, see bench_fused_force).  Variants:
 
 Also reported: sort-op counts.  The migrate/halo packing subgraph must be
 ZERO-sort (channel selection and free-slot insertion are cumsum-rank
-compaction scatters — ISSUE 2), and since ISSUE 5 the WHOLE per-device step
-must lower sort-free when the frequency-gated §5.4.2 layout sort is off
-(the ghost-extended grid build now ranks via the sort-free tiled-histogram
-pass, `repro.kernels.cell_rank`) — probed by the ``fused_sort_off`` variant.
+compaction scatters — ISSUE 2); since ISSUE 5 the ghost-extended grid build
+ranks via the sort-free tiled-histogram pass (`repro.kernels.cell_rank`);
+and since ISSUE 8 the §5.4.2 layout sort is itself a sort-free counting-sort
+permutation — so EVERY variant, sort op gated (sf=8), off (sf=0,
+``fused_sort_off``) or firing every step (sf=1, ``sorted_layout_on``), must
+lower the whole per-device step with ZERO HLO sorts.  A standalone argsort
+lowering inside each probe is the positive detector control.
+
+The fused variant is probed under both halo delta-codecs (int16 and int8 —
+`repro.core.delta` error-feedback quantization; ROADMAP item) so the wire
+format's cost shows up in the tracked json next to the baseline.
 
 Acceptance (ISSUE 2): step bytes dense/fused ≥ 3 at N=8192/device, M=16,
-and packing_sorts == 0.  Acceptance (ISSUE 5): fused_sort_off step_sorts == 0.
+and packing_sorts == 0.  Acceptance (ISSUE 5 + 8): step_sorts == 0 on every
+variant, including sorted_layout_on.
 
 Each probe runs in a subprocess with 4 fake host devices (the main process
 must keep the real single-device view, like tests/test_distributed.py).
@@ -64,7 +72,8 @@ mesh = make_mesh((2, 2), ("data", "model"))
 dcfg = DomainConfig(
     mesh_axes=("data", "model"), axis_sizes=(2, 2), extent=space,
     halo_width=radius, halo_capacity=max(n_per_dev // 4, 64),
-    migrate_capacity=max(n_per_dev // 8, 64), depth=space, halo_codec="int16",
+    migrate_capacity=max(n_per_dev // 8, 64), depth=space,
+    halo_codec=%(halo_codec)r,
 )
 spec = dcfg.grid_spec(box_size=radius, max_per_cell=m)
 ecfg = EngineConfig(
@@ -93,16 +102,22 @@ out = {
 packing_hlo = make_packing_program(mesh, dcfg).lower(state).as_text()
 out["packing_sorts"] = hlo_sort_count(packing_hlo)
 out["step_sorts"] = hlo_sort_count(lowered.as_text())
+# Positive control: the sort detector must still see a real argsort.
+import jax, jax.numpy as jnp
+det = jax.jit(jnp.argsort).lower(jnp.zeros((64,), jnp.float32)).as_text()
+out["detector_sorts"] = hlo_sort_count(det)
 print(json.dumps(out))
 """
 
 
 def _probe(
-    src: str, n: int, m: int, impl: str, fallback: bool, sort_frequency: int = 8
+    src: str, n: int, m: int, impl: str, fallback: bool,
+    sort_frequency: int = 8, halo_codec: str = "int16",
 ) -> dict:
     code = _PROBE % {
         "src": os.path.abspath(src), "n": n, "m": m,
         "impl": impl, "fallback": fallback, "sort_frequency": sort_frequency,
+        "halo_codec": halo_codec,
     }
     proc = subprocess.run(
         [sys.executable, "-c", code], capture_output=True, text=True, timeout=900
@@ -145,16 +160,30 @@ def run(fast: bool = True):
              rec["packing_sorts"], rec["step_sorts"])
         )
 
-    # ISSUE 5: with the frequency-gated §5.4.2 layout sort disabled, the
-    # WHOLE distributed step must lower sort-free — the ghost-extended grid
-    # build was the last per-step sort.  (The variants above keep
-    # sort_frequency=8, so they double as the detector sanity check: the one
-    # intentional, gated sort must still register.)
+    # ISSUE 5: the ghost-extended grid build is sort-free, so the step is
+    # sort-free with the layout sort gated off (fused_sort_off) ...
     nosort = _probe(src, n, m, "fused", False, sort_frequency=0)
     out["step"]["fused_sort_off"] = nosort
     rows.append(
         ("step/fused_sort_off", f"{nosort['bytes_accessed']/1e6:.1f}",
          nosort["packing_sorts"], nosort["step_sorts"])
+    )
+
+    # ... and ISSUE 8: the layout sort itself is sort-free, so the step
+    # stays sort-free even firing it EVERY iteration.
+    sorted_on = _probe(src, n, m, "fused", False, sort_frequency=1)
+    out["step"]["sorted_layout_on"] = sorted_on
+    rows.append(
+        ("step/sorted_layout_on", f"{sorted_on['bytes_accessed']/1e6:.1f}",
+         sorted_on["packing_sorts"], sorted_on["step_sorts"])
+    )
+
+    # ROADMAP: the int8 error-feedback halo codec, accounted next to int16.
+    int8 = _probe(src, n, m, "fused", False, halo_codec="int8")
+    out["step"]["fused_int8_halo"] = int8
+    rows.append(
+        ("step/fused_int8_halo", f"{int8['bytes_accessed']/1e6:.1f}",
+         int8["packing_sorts"], int8["step_sorts"])
     )
 
     ratio = (
@@ -169,22 +198,20 @@ def run(fast: bool = True):
         rows, ["variant", "MB accessed/step", "packing sorts", "step sorts"],
     )
     print(f"step_bytes_dense_over_fused: {ratio:.2f}x")
-    # Lowering gates (ISSUE 3 + ISSUE 5 / scripts/ci.sh smoke tier):
+    # Lowering gates (ISSUE 3 + 5 + 8 / scripts/ci.sh smoke tier):
     #   * the migrate/halo packing subgraph stays sort-free under EVERY
     #     variant of the scheduler-built step;
-    #   * the whole step is sort-free once the gated layout sort is off
-    #     (fused_sort_off) — the sort-count assertion widened from the
-    #     packing subgraph to the full per-device SPMD program;
-    #   * the sort_frequency=8 variants must still show their one
-    #     intentional sort, or the detector is broken.
+    #   * the whole per-device SPMD program is sort-free in every variant —
+    #     layout sort gated (sf=8), off (sf=0), or every-step (sf=1) — now
+    #     that §5.4.2 sorting is a counting-sort permutation;
+    #   * each probe's standalone argsort control must still register, or
+    #     the detector is broken.
     for name, rec in out["step"].items():
+        assert rec["detector_sorts"] > 0, f"{name}: sort detector is blind"
         assert rec["packing_sorts"] == 0, f"{name}: packing must be sort-free"
-        if name == "fused_sort_off":
-            assert rec["step_sorts"] == 0, (
-                "whole step must be sort-free with sort_frequency=0"
-            )
-        else:
-            assert rec["step_sorts"] > 0, f"{name}: sort detector sees no sorts"
+        assert rec["step_sorts"] == 0, (
+            f"{name}: whole step must be sort-free, got {rec['step_sorts']}"
+        )
     path = save_result("dist_fused_force", out)
     print("saved:", path)
     return out

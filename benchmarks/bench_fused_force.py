@@ -117,7 +117,7 @@ def _seed_step(spec, params, pool_state):
     return pool.replace(age=pool.age + jnp.where(pool.alive, 0.1, 0.0))
 
 
-def _engine_step(spec, impl, fallback):
+def _engine_step(spec, impl, fallback, sort_frequency=0, **kw):
     config = EngineConfig(
         spec=spec,
         force_params=ForceParams(),
@@ -125,9 +125,10 @@ def _engine_step(spec, impl, fallback):
         min_bound=0.0,
         max_bound=SPACE,
         boundary="closed",
-        sort_frequency=0,
+        sort_frequency=sort_frequency,
         force_impl=impl,
         fused_overflow_fallback=fallback,
+        **kw,
     )
     return functools.partial(simulation_step, config)
 
@@ -230,6 +231,12 @@ def run(fast: bool = True):
         "dense": (jax.jit(_engine_step(spec, "reference", True)), (state,)),
         "fused": (jax.jit(_engine_step(spec, "fused", False)), (state,)),
         "fused_fallback": (jax.jit(_engine_step(spec, "fused", True)), (state,)),
+        # ISSUE 8: §5.4.2 layout sort enabled EVERY step — the sort-free
+        # counting-sort permutation must keep the whole step sort-free.
+        "sorted_layout_on": (
+            jax.jit(_engine_step(spec, "fused", False, sort_frequency=1)),
+            (state,),
+        ),
     }
     for name, (jitted, args) in steps.items():
         b, sorts = bytes_and_sorts(jitted, *args)
@@ -241,8 +248,10 @@ def run(fast: bool = True):
             # doubles as the sort-detector sanity check.
             assert sorts > 0, "seed baseline lost its argsort (detector?)"
         else:
-            # Engine steps run with sort_frequency=0 — since the sort-free
-            # grid build (ISSUE 5) nothing in them may lower to a sort.
+            # Engine steps must lower sort-free: the grid build since
+            # ISSUE 5, and — for sorted_layout_on, which enables the §5.4.2
+            # layout sort every step — the counting-sort permutation of
+            # ISSUE 8.
             assert sorts == 0, f"step/{name}: expected sort-free, got {sorts}"
 
     out["ratios"] = {

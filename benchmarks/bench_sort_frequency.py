@@ -4,20 +4,27 @@ frequencies.
 The paper sweeps how often the space-filling-curve sort runs: sorting every
 iteration wastes time, never sorting degrades locality as agents move.  We
 measure per-iteration cost at several frequencies on a mobile workload
-(Brownian cells), including the sort's own amortized cost."""
+(Brownian cells), including the sort's own amortized cost.
 
-import functools
+Since ISSUE 8 the §5.4.2 sort is a sort-free counting-sort permutation, so
+every point of the sweep — including ``every 1`` — must lower with ZERO HLO
+sorts; each frequency's compiled step is also accounted compile-only
+(bytes accessed + sort count), making this module the frequency-axis
+rot-check of the morton_layout matrix in the BENCH_SMOKE tier.
+"""
+
+import sys
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .common import print_table, save_result, smoke
+from .common import bytes_and_sorts, print_table, save_result, smoke
 
 from repro.core import (
     EngineConfig, ForceParams, brownian_motion, init_state, make_pool,
-    run_jit, spec_for_space,
+    run_jit, simulation_step, spec_for_space,
 )
 
 
@@ -41,6 +48,17 @@ def run(fast: bool = True):
         )
         pool = make_pool(n, jnp.asarray(pos), diameter=1.5)
         state = init_state(pool, seed=9)
+        # Compile-only account of one step at this frequency: bytes and —
+        # the ISSUE-8 lowering guarantee — zero HLO sorts even with the
+        # layout sort firing every iteration.
+        step_bytes, step_sorts = bytes_and_sorts(
+            jax.jit(lambda s, c=config: simulation_step(c, s)), state
+        )
+        assert step_sorts == 0, (
+            f"sort_frequency={freq}: step lowered with {step_sorts} HLO "
+            "sorts — the §5.4.2 layout sort must stay a counting-sort "
+            "permutation"
+        )
         # warm + run a fixed horizon so sort amortization is included
         state, _ = run_jit(config, state, 4)
         t0 = time.time()
@@ -49,9 +67,22 @@ def run(fast: bool = True):
         per_iter = (time.time() - t0) / 32
         base = base or per_iter
         label = "never" if freq == 0 else f"every {freq}"
-        rows.append([label, f"{per_iter*1e3:.1f} ms", f"{base/per_iter:.2f}×"])
-        out[freq] = per_iter
+        rows.append([
+            label, f"{per_iter*1e3:.1f} ms", f"{base/per_iter:.2f}×",
+            f"{step_bytes/1e6:.1f}", step_sorts,
+        ])
+        out[str(freq)] = {
+            "per_iter_s": per_iter,
+            "step_bytes": step_bytes,
+            "step_sorts": step_sorts,
+        }
     print_table(f"Fig 5.14: §5.4.2 sort frequency sweep ({n} mobile agents)",
-                rows, ["sort frequency", "per-iteration", "vs never"])
-    save_result("sort_frequency", {str(k): v for k, v in out.items()})
+                rows,
+                ["sort frequency", "per-iteration", "vs never", "MB/step",
+                 "sorts"])
+    save_result("sort_frequency", out)
     return out
+
+
+if __name__ == "__main__":
+    run(fast="--full" not in sys.argv)

@@ -15,6 +15,7 @@
 | bench_moe_token_sort  | beyond-paper: §5.4.2 sorting → MoE dispatch     |
 | bench_fused_force     | DESIGN.md §4 fused cell-list force HBM bytes    |
 | bench_dist_fused      | §6.2 distributed fused force + sort-free packing|
+| bench_morton_layout   | §5.4.2 sort-free Z-order layout × morton tiles  |
 
 Smoke tier: `scripts/bench.sh` (BENCH_SMOKE=1) shrinks problem sizes so every
 target executes end-to-end in minutes — benchmark bit-rot fails fast in CI.
@@ -36,6 +37,7 @@ from . import (
     bench_fused_force,
     bench_halo_packing,
     bench_moe_token_sort,
+    bench_morton_layout,
     bench_neighbor_search,
     bench_scaling,
     bench_sort_frequency,
@@ -54,6 +56,7 @@ ALL = {
     "moe_token_sort": bench_moe_token_sort,
     "fused_force": bench_fused_force,
     "dist_fused": bench_dist_fused,
+    "morton_layout": bench_morton_layout,
 }
 
 

@@ -15,7 +15,13 @@
 #     sort into packing fails here, not on the next hardware run;
 #   * bench_fused_force re-probes the fused step at the tracked size
 #     (compile-only cost_analysis) and asserts bytes/step within 5% of
-#     results/bench/fused_force.json.
+#     results/bench/fused_force.json;
+#   * bench_morton_layout.guard() re-probes the morton-window acceptance
+#     row the same way (5% drift vs results/bench/morton_layout.json,
+#     ≥1.3x bytes win vs linear fused, zero HLO sorts at sort_frequency=1);
+#   * bench_sort_frequency asserts the whole step lowers with ZERO sorts at
+#     EVERY sort_frequency — the §5.4.2 layout sort must stay a
+#     counting-sort permutation (ISSUE 8).
 # The example smoke tier (scripts/examples.sh) runs each use-case example a
 # handful of steps through the `Simulation` model API (DESIGN.md §6).
 # The kill-and-resume tier (DESIGN.md §7) SIGKILLs a checkpointed run

@@ -304,6 +304,26 @@ def permute(pool: AgentPool, perm: Array) -> AgentPool:
     )
 
 
+def permute_to(pool: AgentPool, dest: Array) -> AgentPool:
+    """Scatter agent ``i`` to slot ``dest[i]`` (``dest`` must be a permutation).
+
+    The scatter form of :func:`permute`: ``permute_to(pool, dest)`` equals
+    ``permute(pool, argsort(dest))`` without materializing the inverse.  The
+    sort-free layout sort computes destinations directly (offset + rank), so
+    this avoids the argsort that inverting would need.
+    """
+    scat = lambda x: jnp.zeros_like(x).at[dest].set(x)
+    return pool.replace(
+        position=scat(pool.position),
+        diameter=scat(pool.diameter),
+        kind=scat(pool.kind),
+        age=scat(pool.age),
+        alive=scat(pool.alive),
+        static=scat(pool.static),
+        attrs={k: scat(v) for k, v in pool.attrs.items()},
+    )
+
+
 def compact(pool: AgentPool) -> AgentPool:
     """Move alive agents to the front (stable).  Restores density after removal."""
     # Stable argsort on "dead" flag: alive (0) before dead (1).

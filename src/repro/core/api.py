@@ -309,6 +309,10 @@ class Simulation:
         overflow_fallback: bool = True,
         interpret: bool = True,
         diffusion_impl: str = "reference",
+        tile_order: str = "linear",
+        morton_block: Optional[int] = None,
+        morton_window: Optional[int] = None,
+        morton_window_fallback: bool = True,
     ) -> "Simulation":
         """Enable Eq-4.1 contact mechanics (+ engine impl knobs).
 
@@ -316,6 +320,9 @@ class Simulation:
         this method is never called).  ``impl``/``active_capacity``/``tile``/
         ``overflow_fallback``/``interpret`` map onto the EngineConfig force
         options; ``diffusion_impl`` selects the diffusion kernel.
+        ``tile_order="morton"`` (fused impl, single-node) runs the
+        Morton-window force kernel over the layout-sorted pool, with the
+        ``morton_*`` knobs mapping onto their EngineConfig counterparts.
         """
         self._force_params = params
         self._force_opts = dict(
@@ -325,6 +332,10 @@ class Simulation:
             fused_overflow_fallback=overflow_fallback,
             kernel_interpret=interpret,
             diffusion_impl=diffusion_impl,
+            tile_order=tile_order,
+            morton_block=morton_block,
+            morton_window=morton_window,
+            morton_window_fallback=morton_window_fallback,
         )
         return self
 

@@ -65,6 +65,17 @@ class EngineConfig:
     # subset via NeighborContext.candidates_for, never the dense (C, 27M)
     # tensor — see mechanical_forces.)
     fused_overflow_fallback: bool = True
+    # "fused" only: force-tile iteration order.  "morton" runs the Morton-
+    # window kernel over the layout-sorted pool (storage-order tiles, ± a
+    # window of contiguous blocks — §5.4.2's locality payoff), guarded per
+    # step by a coverage check with lax.cond fallback to the linear path
+    # (morton_window_fallback; disable only for compile-cost benchmarks on
+    # known-sorted layouts).  block/window default per pool size — see
+    # repro.kernels.cell_force.ops.window_defaults.
+    tile_order: str = "linear"                       # linear | morton
+    morton_block: Optional[int] = None
+    morton_window: Optional[int] = None
+    morton_window_fallback: bool = True
     # Pallas interpret mode for the kernel force impls (CPU-container
     # default; set False on TPU hardware for the Mosaic lowering).
     kernel_interpret: bool = True

@@ -29,10 +29,55 @@ import jax
 import jax.numpy as jnp
 
 from .agents import AgentPool, compact_indices
-from .grid import GridIndex, GridSpec, neighbor_cell_ids
+from .grid import _NEIGHBOR_OFFSETS, GridIndex, GridSpec, neighbor_cell_ids
 from .neighbors import NeighborContext
 
 Array = jax.Array
+
+
+def _morton_window_ok(
+    spec: GridSpec,
+    index: GridIndex,
+    block: int | None,
+    window: int | None,
+) -> Array:
+    """() bool: may this step run the Morton-window force kernel exactly?
+
+    The window kernel is exact iff every live agent's 27-box neighbors all
+    sit within ``± half_window`` storage blocks of its own row.  Checked
+    from the *actual* rows (per-cell min/max row via scatter, O(C + 27C)),
+    not from an assumed-sorted layout — an unsorted or half-sorted pool
+    simply fails the check and takes the fallback, it can never produce a
+    wrong force.  Uses the same stale cell ids as the kernels, so the pair
+    set being certified is exactly the one the kernel computes.
+    """
+    from repro.kernels.cell_force import ops as cf_ops
+
+    cid = index.cell_of_agent
+    c = cid.shape[0]
+    bw, h = cf_ops.window_defaults(c, block, window)
+    n_cells = spec.n_cells
+    nx, ny, nz = spec.dims
+
+    rows = jnp.arange(c, dtype=jnp.int32)
+    live = cid < n_cells
+    big = jnp.int32(c)
+    rmin = jnp.full((n_cells + 1,), big, jnp.int32).at[cid].min(rows)
+    rmax = jnp.full((n_cells + 1,), -1, jnp.int32).at[cid].max(rows)
+
+    ijk = jnp.stack([cid // (ny * nz), (cid // nz) % ny, cid % nz], axis=-1)
+    nbr = ijk[:, None, :] + _NEIGHBOR_OFFSETS[None, :, :]        # (C, 27, 3)
+    dims = jnp.asarray(spec.dims, jnp.int32)
+    in_range = jnp.all((nbr >= 0) & (nbr < dims), axis=-1)
+    ncid = (nbr[..., 0] * ny + nbr[..., 1]) * nz + nbr[..., 2]
+    ncid = jnp.clip(ncid, 0, n_cells - 1)
+    nmn = jnp.min(jnp.where(in_range, rmin[ncid], big), axis=1)  # (C,)
+    nmx = jnp.max(jnp.where(in_range, rmax[ncid], -1), axis=1)
+
+    blk = rows // bw
+    lo = (blk - h) * bw
+    hi = (blk + h + 1) * bw
+    return jnp.all(~live | ((nmn >= lo) & (nmx < hi)))
 
 
 @jax.tree_util.register_dataclass
@@ -149,6 +194,10 @@ def mechanical_forces(
     fused_fallback: bool = True,
     interpret: bool = True,
     tile: Optional[int] = None,
+    tile_order: str = "linear",
+    morton_block: Optional[int] = None,
+    morton_window: Optional[int] = None,
+    morton_fallback: bool = True,
 ) -> Array:
     """Net mechanical force per agent, (C, 3).
 
@@ -178,6 +227,18 @@ def mechanical_forces(
     the Mosaic lowering).  ``tile``: evaluate the dense candidate path in
     agent tiles of this size (bounds the (tile, K, 3) working set; applies
     to the reference impl and the fused path's overflow fallback).
+
+    ``tile_order="morton"`` (fused impl, single-node sources only): run the
+    Morton-window kernel of `repro.kernels.cell_force` — storage-order tiles
+    over the layout-sorted pool, each folding ``± morton_window`` contiguous
+    blocks of ``morton_block`` agents (§5.4.2: the sorted layout turns the
+    27-box gather into contiguous DMA).  Guarded per step by
+    :func:`_morton_window_ok` ∧ no overflow; ``morton_fallback`` wraps that
+    guard in a ``lax.cond`` to the linear fused path (bit-exact semantics
+    whenever the window doesn't cover — set False only when the layout is
+    known-sorted, e.g. the compile-cost benchmarks, since the cond bills
+    both branches).  Ghost-extended sources always take the linear path:
+    halo rows sit *appended* after the pool, never window-local to it.
 
     Combining ``impl="fused"`` with ``active_capacity`` composes: the
     compacted branch builds its candidate rows through
@@ -239,6 +300,21 @@ def mechanical_forces(
             k=params.repulsion_k, gamma=params.attraction_gamma,
             interpret=interpret, num_out=c,
         )
+        if tile_order == "morton" and src_pos is pool.position:
+            morton_eval = lambda: cf_ops.cell_window_force(
+                pool.position, radius, index.cell_of_agent, spec.dims,
+                k=params.repulsion_k, gamma=params.attraction_gamma,
+                block=morton_block, window=morton_window,
+                interpret=interpret,
+            )
+            if morton_fallback:
+                ok = _morton_window_ok(
+                    spec, index, morton_block, morton_window
+                ) & ~index.overflowed
+                linear_fused = fused
+                fused = lambda: jax.lax.cond(ok, morton_eval, linear_fused)
+            else:
+                fused = morton_eval
         if fused_fallback:
             dense = lambda: jax.lax.cond(
                 index.overflowed,

@@ -31,7 +31,7 @@ import jax
 import jax.numpy as jnp
 
 from . import morton
-from .agents import AgentPool, permute
+from .agents import AgentPool, permute, permute_to
 
 Array = jax.Array
 
@@ -100,17 +100,90 @@ def sort_key(spec: GridSpec, ijk: Array) -> Array:
     return linear_cell_id(spec, ijk).astype(jnp.uint32)
 
 
-def sort_agents(spec: GridSpec, pool: AgentPool) -> AgentPool:
+def layout_rank_table(spec: GridSpec) -> Array:
+    """(n_cells + 1,) int32: linear cell id → rank in layout (Z-)order.
+
+    Slot ``n_cells`` is the dead-agent bin and ranks last.  The table is a
+    host-computed constant (the grid shape is static), so consuming it costs
+    no HLO sort.
+    """
+    zrank = morton.cell_zrank(spec.dims, spec.use_morton)
+    return jnp.asarray(
+        jnp.concatenate(
+            [jnp.asarray(zrank, jnp.int32), jnp.asarray([spec.n_cells], jnp.int32)]
+        )
+    )
+
+
+def sort_agents(
+    spec: GridSpec,
+    pool: AgentPool,
+    interpret: bool = True,
+    rank_tile: int | None = None,
+) -> AgentPool:
     """§5.4.2 agent sorting: reorder the pool along the space-filling curve.
 
     Dead agents sort to the back (key = max), which doubles as the paper's
     §5.3.2 compaction.
+
+    Sort-free: instead of a stable argsort on the Morton key, the permutation
+    is assembled counting-sort style from the `kernels/cell_rank`
+    tiled-histogram machinery — per-cell counts, an exclusive scan over cells
+    *in Z-order* (a trace-time table, since the grid is static), and each
+    agent's index-order rank within its cell:
+
+        dest[i] = z_offset[cell[i]] + rank_within_cell[i]
+
+    which is exactly the slot a stable argsort on the Morton key would give
+    agent ``i`` (the Z-rank of a cell is strictly monotone in its Morton code,
+    and stable ties break in index order — precisely ``cell_rank``).  The pool
+    is then scattered with :func:`repro.core.agents.permute_to`.  Zero HLO
+    sorts, so enabling ``sort_frequency=1`` keeps the whole-step zero-sort
+    guarantee.  Bit-exactness vs the retired argsort is pinned by
+    ``tests/grid_oracle.sort_agents_argsort``.
+
+    Grids too large for the trace-time Z-rank table fall back to the argsort.
     """
+    if spec.n_cells > morton.MAX_TABLE_CELLS:
+        ijk = cell_coords(spec, pool.position)
+        key = sort_key(spec, ijk)
+        key = jnp.where(pool.alive, key, jnp.uint32(0xFFFFFFFF))
+        perm = jnp.argsort(key, stable=True)
+        return permute(pool, perm)
+
+    n_cells = spec.n_cells
     ijk = cell_coords(spec, pool.position)
-    key = sort_key(spec, ijk)
-    key = jnp.where(pool.alive, key, jnp.uint32(0xFFFFFFFF))
-    perm = jnp.argsort(key, stable=True)
-    return permute(pool, perm)
+    cid = jnp.where(pool.alive, linear_cell_id(spec, ijk), n_cells)  # (C,)
+    zid = layout_rank_table(spec)[cid]  # rank of the agent's cell in Z-order
+
+    from repro.kernels.cell_rank import ops as cr_ops
+
+    rank = cr_ops.cell_rank(
+        zid,
+        n_cells=n_cells,
+        impl=spec.rank_impl,
+        tile=rank_tile,
+        interpret=interpret,
+    )
+    counts = jnp.zeros((n_cells + 1,), jnp.int32).at[zid].add(1)
+    offsets = jnp.cumsum(counts) - counts  # exclusive scan in Z-order
+    dest = offsets[zid] + rank
+    return permute_to(pool, dest)
+
+
+def cell_starts_sorted(spec: GridSpec, cell_count: Array) -> tuple[Array, Array]:
+    """Per-cell [start, end) row ranges of a layout-sorted pool.
+
+    Given per-cell live counts, returns ``(start, end)``, both ``(n_cells,)``
+    int32: when the pool is sorted along the layout curve (dead at the back),
+    the live agents of linear cell ``c`` occupy rows ``start[c]:end[c]``.
+    Pure O(n_cells) table arithmetic — no sort.
+    """
+    order = jnp.asarray(morton.zorder_cells(spec.dims, spec.use_morton))
+    zcounts = cell_count[order]
+    zstarts = jnp.cumsum(zcounts) - zcounts  # exclusive scan in layout order
+    start = jnp.zeros_like(cell_count).at[order].set(zstarts)
+    return start, start + cell_count
 
 
 def build_index_arrays(
@@ -119,6 +192,7 @@ def build_index_arrays(
     alive: Array,
     interpret: bool = True,
     rank_tile: int | None = None,
+    assume_sorted: bool = False,
 ) -> GridIndex:
     """Build the cell list (the §5.3.1 'build stage'), fully parallel.
 
@@ -141,24 +215,38 @@ def build_index_arrays(
     (the engines pass ``EngineConfig.kernel_interpret``); ``rank_tile``
     overrides the ≈√n_cells rank tile (tests keep interpret-mode grids
     coarse with it).
+
+    ``assume_sorted`` promises the arrays are already layout-sorted — i.e.
+    :func:`sort_agents` ran on this exact pool with this exact spec and
+    nothing reordered or moved agents since (true on the single-node engine
+    at ``sort_frequency=1``; never true distributed, where migrate/halo run
+    between sort and build).  The within-cell rank is then just
+    ``row − cell_start`` (:func:`cell_starts_sorted`), skipping the
+    tiled-histogram ``cell_rank`` pass entirely — the §5.4.2 payoff where a
+    sorted layout makes the build as cheap as the paper's timestamped one.
     """
     c = position.shape[0]
     n_cells = spec.n_cells
     ijk = cell_coords(spec, position)
     cid = jnp.where(alive, linear_cell_id(spec, ijk), n_cells)  # (C,)
 
-    from repro.kernels.cell_rank import ops as cr_ops
-
-    rank = cr_ops.cell_rank(
-        cid,
-        n_cells=n_cells,
-        impl=spec.rank_impl,
-        tile=rank_tile,
-        interpret=interpret,
-    )
-
     counts = jnp.zeros((n_cells + 1,), jnp.int32).at[cid].add(1)
     cell_count = counts[:n_cells]
+
+    if assume_sorted:
+        start, _ = cell_starts_sorted(spec, cell_count)
+        start_ext = jnp.concatenate([start, jnp.zeros((1,), jnp.int32)])
+        rank = jnp.arange(c, dtype=jnp.int32) - start_ext[cid]
+    else:
+        from repro.kernels.cell_rank import ops as cr_ops
+
+        rank = cr_ops.cell_rank(
+            cid,
+            n_cells=n_cells,
+            impl=spec.rank_impl,
+            tile=rank_tile,
+            interpret=interpret,
+        )
     overflowed = jnp.any(cell_count > spec.max_per_cell)
 
     # Scatter into the dense cell list (drop overflow + dead).
@@ -183,9 +271,15 @@ def build_index(
     pool: AgentPool,
     interpret: bool = True,
     rank_tile: int | None = None,
+    assume_sorted: bool = False,
 ) -> GridIndex:
     return build_index_arrays(
-        spec, pool.position, pool.alive, interpret=interpret, rank_tile=rank_tile
+        spec,
+        pool.position,
+        pool.alive,
+        interpret=interpret,
+        rank_tile=rank_tile,
+        assume_sorted=assume_sorted,
     )
 
 

@@ -15,10 +15,19 @@ and the sort key stays inside uint32.
 
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 Array = jax.Array
+
+# Largest grid (in cells) for which the trace-time Z-rank tables below are
+# materialized as HLO constants (4 MiB of int32 at the cap).  Beyond it,
+# sort_agents falls back to the stable argsort — grids that size exceed this
+# container anyway, and nothing asserts zero-sort lowering at such scales.
+MAX_TABLE_CELLS = 1 << 20
 
 _B32 = [0x09249249, 0x030C30C3, 0x0300F00F, 0xFF0000FF, 0x000003FF]
 _S32 = [2, 4, 8, 16]
@@ -67,3 +76,54 @@ def bits_for(n: int) -> int:
 def max_grid_dim() -> int:
     """Largest per-dimension grid size encodable in a uint32 Morton code."""
     return 1 << 10
+
+
+def _part1by2_np(x: np.ndarray) -> np.ndarray:
+    x = x.astype(np.uint32) & np.uint32(_B32[4])
+    x = (x | (x << _S32[3])) & np.uint32(_B32[3])
+    x = (x | (x << _S32[2])) & np.uint32(_B32[2])
+    x = (x | (x << _S32[1])) & np.uint32(_B32[1])
+    x = (x | (x << _S32[0])) & np.uint32(_B32[0])
+    return x
+
+
+def encode3_np(ix: np.ndarray, iy: np.ndarray, iz: np.ndarray) -> np.ndarray:
+    """Host-side mirror of :func:`encode3` for building trace-time tables."""
+    return _part1by2_np(ix) | (_part1by2_np(iy) << np.uint32(1)) | (
+        _part1by2_np(iz) << np.uint32(2)
+    )
+
+
+@functools.lru_cache(maxsize=None)
+def zorder_cells(dims: tuple[int, int, int], use_morton: bool = True) -> np.ndarray:
+    """Linear cell ids listed in layout order (Z-order when ``use_morton``).
+
+    Entry ``r`` is the linear cell id occupying rank ``r`` of the layout sort
+    key.  With ``use_morton=False`` the layout key *is* the linear id, so this
+    is just ``arange``.  Computed once per grid shape on the host: the grid is
+    a compile-time constant, so consumers embed the table as an HLO constant
+    and no runtime sort ever lowers.
+    """
+    nx, ny, nz = dims
+    n_cells = nx * ny * nz
+    if not use_morton:
+        return np.arange(n_cells, dtype=np.int32)
+    ix, iy, iz = np.meshgrid(
+        np.arange(nx, dtype=np.uint32),
+        np.arange(ny, dtype=np.uint32),
+        np.arange(nz, dtype=np.uint32),
+        indexing="ij",
+    )
+    codes = encode3_np(ix, iy, iz).reshape(-1)
+    # encode3 is injective for dims <= max_grid_dim(), so this argsort is a
+    # permutation; kind="stable" keeps it deterministic regardless.
+    return np.argsort(codes, kind="stable").astype(np.int32)
+
+
+@functools.lru_cache(maxsize=None)
+def cell_zrank(dims: tuple[int, int, int], use_morton: bool = True) -> np.ndarray:
+    """Inverse of :func:`zorder_cells`: linear cell id → rank in layout order."""
+    order = zorder_cells(dims, use_morton)
+    inv = np.empty_like(order)
+    inv[order] = np.arange(order.shape[0], dtype=np.int32)
+    return inv

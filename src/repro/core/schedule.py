@@ -328,7 +328,10 @@ def sort_op(config) -> Operation:
 
     def fn(ctx: OpContext, state):
         return dataclasses.replace(
-            state, pool=sort_agents(config.spec, state.pool)
+            state,
+            pool=sort_agents(
+                config.spec, state.pool, interpret=config.kernel_interpret
+            ),
         )
 
     return Operation(
@@ -344,8 +347,16 @@ def env_build_op(config) -> Operation:
     the behaviors' StepContext."""
 
     def fn(ctx: OpContext, state):
+        # At sort_frequency=1 the layout sort ran immediately before this op
+        # and nothing in between reorders the pool, so the build may assume a
+        # layout-sorted pool and skip the cell_rank pass.  Single-node only:
+        # the distributed engine replaces this op (migrate/halo run between
+        # sort and its own build, breaking sortedness).
         index = build_index(
-            config.spec, state.pool, interpret=config.kernel_interpret
+            config.spec,
+            state.pool,
+            interpret=config.kernel_interpret,
+            assume_sorted=config.sort_frequency == 1,
         )
         ctx.index = index
         ctx.neighbors = NeighborContext.for_pool(config.spec, index, state.pool)
@@ -397,6 +408,10 @@ def forces_op(config) -> Operation:
             fused_fallback=config.fused_overflow_fallback,
             interpret=config.kernel_interpret,
             tile=config.force_tile,
+            tile_order=config.tile_order,
+            morton_block=config.morton_block,
+            morton_window=config.morton_window,
+            morton_fallback=config.morton_window_fallback,
         )
         pool = pool.replace(position=pool.position + force * config.dt)
         return dataclasses.replace(state, pool=pool)

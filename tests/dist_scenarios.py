@@ -349,13 +349,22 @@ def scenario_telemetry():
 
 def scenario_packing_no_sort():
     """The migrate/halo packing hot path must lower with ZERO sort ops —
-    selection and insertion are cumsum-rank compaction scatters now.  The
-    full step keeps its (intentional) sorts: §5.4.2 agent sorting and the
-    grid build; that positive control also proves the detector sees sorts."""
+    selection and insertion are cumsum-rank compaction scatters now.  Since
+    the §5.4.2 layout sort went sort-free too (counting-sort permutation,
+    ISSUE 8), the ENTIRE distributed step must lower sort-free even with the
+    sort op enabled; a standalone argsort lowering is the positive control
+    proving the detector sees sorts."""
+    import jax
+    import jax.numpy as jnp
     from repro.core.distributed import hlo_sort_count, make_packing_program
 
     mesh, dcfg, ecfg, pos, n = _force_only_setup("int16")
     state = init_dist_state(dcfg, capacity=192, positions=pos, diameter=1.6)
+
+    detector_hlo = jax.jit(jnp.argsort).lower(
+        jnp.zeros((64,), jnp.float32)
+    ).as_text()
+    assert hlo_sort_count(detector_hlo) > 0, "detector broken: argsort unseen"
 
     packing_hlo = make_packing_program(mesh, dcfg).lower(state).as_text()
     n_packing = hlo_sort_count(packing_hlo)
@@ -363,8 +372,15 @@ def scenario_packing_no_sort():
     step_hlo = make_distributed_step(mesh, dcfg, ecfg).lower(state).as_text()
     n_step = hlo_sort_count(step_hlo)
 
-    print(f"sort ops: packing={n_packing}, full step={n_step}")
-    assert n_step > 0, "detector broken: grid-build sort not seen in full step"
+    # ISSUE 8 acceptance: sort-free with the layout sort firing EVERY step,
+    # not just cond-gated (sort_frequency=4 above).
+    ecfg_sf1 = dataclasses.replace(ecfg, sort_frequency=1)
+    sf1_hlo = make_distributed_step(mesh, dcfg, ecfg_sf1).lower(state).as_text()
+    n_sf1 = hlo_sort_count(sf1_hlo)
+
+    print(f"sort ops: packing={n_packing}, full step={n_step}, sf=1 {n_sf1}")
+    assert n_step == 0, f"{n_step} sort ops left in the full distributed step"
+    assert n_sf1 == 0, f"{n_sf1} sort ops in the sf=1 distributed step"
     assert n_packing == 0, f"{n_packing} sort ops left in migrate/halo packing"
     print("packing sort-free OK")
 

@@ -14,7 +14,29 @@ exist to catch.
 import jax
 import jax.numpy as jnp
 
-from repro.core.grid import GridIndex, GridSpec, cell_coords, linear_cell_id
+from repro.core.agents import AgentPool, permute
+from repro.core.grid import (
+    GridIndex,
+    GridSpec,
+    cell_coords,
+    linear_cell_id,
+    sort_key,
+)
+
+
+def sort_agents_argsort(spec: GridSpec, pool: AgentPool) -> AgentPool:
+    """The retired argsort-backed §5.4.2 layout sort, kept bit-for-bit.
+
+    The sort-free ``grid.sort_agents`` (counting-sort permutation from the
+    cell_rank histogram machinery) must reproduce this pool exactly —
+    including tie order among agents of one cell and dead-agents-to-the-back
+    compaction.
+    """
+    ijk = cell_coords(spec, pool.position)
+    key = sort_key(spec, ijk)
+    key = jnp.where(pool.alive, key, jnp.uint32(0xFFFFFFFF))
+    perm = jnp.argsort(key, stable=True)
+    return permute(pool, perm)
 
 
 def build_index_arrays_argsort(

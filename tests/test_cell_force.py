@@ -100,6 +100,102 @@ def test_fused_custom_params():
     assert float(jnp.max(jnp.abs(fused - ref))) < 1e-5
 
 
+# --------------------------------------------- Morton window kernel (ISSUE 8)
+
+@pytest.mark.parametrize(
+    "n,cap,space,radius,m,block",
+    [
+        (60, 80, 30.0, 3.0, 16, 32),
+        (200, 256, 40.0, 5.0, 32, 64),
+        (30, 64, 12.0, 6.0, 32, 16),   # tiny grid: every cell on boundary
+        (5, 8, 10.0, 5.0, 4, 8),       # near-empty
+    ],
+)
+def test_window_kernel_matches_oracle_full_window(n, cap, space, radius, m, block):
+    """With window ≥ #blocks the sweep is masked all-pairs, exact for ANY
+    layout — tests the kernel's pair math/masking without needing a sorted
+    pool."""
+    rng = np.random.default_rng(n + m)
+    pool = _random_pool(rng, n, cap, space)
+    spec = spec_for_space(0.0, space, radius, max_per_cell=m)
+    index = build_index(spec, pool)
+    assert not bool(index.overflowed)
+    ref = cf_ops.cell_list_force(
+        pool.position, pool.radius(), index.cell_list, spec.dims,
+        impl="reference",
+    )
+    win = cf_ops.cell_window_force(
+        pool.position, pool.radius(), index.cell_of_agent, spec.dims,
+        block=block, window=-(-cap // block),
+    )
+    np.testing.assert_allclose(np.asarray(win), np.asarray(ref), atol=1e-5)
+
+
+def test_window_kernel_sorted_narrow_window():
+    """On a layout-sorted pool a narrow window must already cover every
+    neighborhood (certified by _morton_window_ok) and match the oracle."""
+    from repro.core import sort_agents
+    from repro.core.forces import _morton_window_ok
+
+    rng = np.random.default_rng(3)
+    pool = _random_pool(rng, 200, 256, 40.0)
+    spec = spec_for_space(0.0, 40.0, 5.0, max_per_cell=32)
+    pool = sort_agents(spec, pool)
+    index = build_index(spec, pool, assume_sorted=True)
+    assert bool(_morton_window_ok(spec, index, 32, 3))
+    ref = cf_ops.cell_list_force(
+        pool.position, pool.radius(), index.cell_list, spec.dims,
+        impl="reference",
+    )
+    win = cf_ops.cell_window_force(
+        pool.position, pool.radius(), index.cell_of_agent, spec.dims,
+        block=32, window=3,
+    )
+    np.testing.assert_allclose(np.asarray(win), np.asarray(ref), atol=1e-5)
+
+
+def test_morton_dispatch_falls_back_when_window_violated():
+    """An unsorted pool fails the coverage check, so tile_order='morton'
+    with a narrow window must route through the linear fused path bit-
+    exactly."""
+    from repro.core.forces import _morton_window_ok
+
+    rng = np.random.default_rng(9)
+    pool = _random_pool(rng, 150, 192, 40.0)   # storage order = random order
+    spec = spec_for_space(0.0, 40.0, 5.0, max_per_cell=32)
+    index = build_index(spec, pool)
+    assert not bool(_morton_window_ok(spec, index, 32, 1))
+    linear = mechanical_forces(spec, index, pool, ForceParams(), impl="fused")
+    morton = mechanical_forces(
+        spec, index, pool, ForceParams(), impl="fused",
+        tile_order="morton", morton_block=32, morton_window=1,
+    )
+    np.testing.assert_array_equal(np.asarray(morton), np.asarray(linear))
+
+
+def test_engine_trajectories_match_morton():
+    """Full engine at sort_frequency=1 with tile_order='morton' vs the
+    linear fused engine — same trajectories to float tolerance."""
+    rng = np.random.default_rng(17)
+    pool = _random_pool(rng, 120, 160, 40.0)
+    spec = spec_for_space(0.0, 40.0, 5.0, max_per_cell=32)
+    state = init_state(pool, seed=2)
+    lin, _ = run_jit(
+        _engine_config(spec, 40.0, "fused", sort_frequency=1), state, 8
+    )
+    mor, _ = run_jit(
+        _engine_config(
+            spec, 40.0, "fused", sort_frequency=1,
+            tile_order="morton", morton_block=32, morton_window=4,
+        ),
+        state, 8,
+    )
+    np.testing.assert_allclose(
+        np.asarray(mor.pool.position), np.asarray(lin.pool.position), atol=1e-4
+    )
+    assert bool(jnp.all(mor.pool.alive == lin.pool.alive))
+
+
 # ------------------------------------------------------- engine-level parity
 
 def _engine_config(spec, space, impl, **kw):

@@ -12,7 +12,7 @@ import numpy as np
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
-from grid_oracle import build_index_arrays_argsort
+from grid_oracle import build_index_arrays_argsort, sort_agents_argsort
 
 from repro.core import (
     build_index,
@@ -45,6 +45,139 @@ def test_morton_locality():
     assert int(a) == int(b)
     c = morton.encode3(jnp.uint32(5), jnp.uint32(6), jnp.uint32(8))
     assert int(a) != int(c)
+
+
+# ----------------------------------------------- morton property tests (ISSUE 8)
+# The sort-free permutation's bit-exactness proof leans on three facts about
+# encode3: it is injective over the grid (so the Z-rank table is a
+# permutation), strictly monotone per coordinate, and wraps mod
+# max_grid_dim() rather than bleeding into other coordinates' bit lanes.
+
+
+def _grid_codes(dims):
+    nx, ny, nz = dims
+    ix, iy, iz = np.meshgrid(
+        np.arange(nx, dtype=np.uint32),
+        np.arange(ny, dtype=np.uint32),
+        np.arange(nz, dtype=np.uint32),
+        indexing="ij",
+    )
+    return morton.encode3_np(ix, iy, iz).reshape(-1)
+
+
+@settings(deadline=None, max_examples=30)
+@given(
+    nx=st.integers(1, morton.max_grid_dim()),
+    ny=st.integers(1, morton.max_grid_dim()),
+    nz=st.integers(1, morton.max_grid_dim()),
+)
+def test_morton_encode3_bijective_noncubic(nx, ny, nz):
+    """encode3 is injective over any (possibly extremely non-cubic) grid with
+    per-dimension sizes up to max_grid_dim() — the property that makes the
+    trace-time Z-rank table a permutation and the counting-sort layout
+    permutation bit-exact vs the argsort oracle."""
+    # Keep the enumerated grid small while still exercising dims at the cap:
+    # shrink the two largest dims until the product is enumerable.
+    dims = [nx, ny, nz]
+    while int(np.prod(dims)) > 1 << 16:
+        dims[int(np.argmax(dims))] = (max(dims) + 1) // 2
+    codes = _grid_codes(tuple(dims))
+    assert np.unique(codes).size == codes.size
+
+
+def test_morton_encode3_bijective_at_dim_cap():
+    """Deterministic pins of the hypothesis search: grids with one or two
+    dimensions AT max_grid_dim() stay collision-free."""
+    for dims in [(1024, 8, 8), (4, 1024, 16), (3, 5, 1024), (1024, 64, 1),
+                 (1, 1024, 64)]:
+        codes = _grid_codes(dims)
+        assert np.unique(codes).size == codes.size, dims
+
+
+@settings(deadline=None, max_examples=50)
+@given(
+    x=st.integers(0, morton.max_grid_dim() - 2),
+    y=st.integers(0, morton.max_grid_dim() - 1),
+    z=st.integers(0, morton.max_grid_dim() - 1),
+)
+def test_morton_monotone_per_coordinate(x, y, z):
+    """encode3 strictly increases when any single coordinate increments —
+    with injectivity, this is why Z-rank order refines spatial order and the
+    stable counting sort reproduces the argsort permutation exactly."""
+    c = int(morton.encode3_np(np.uint32(x), np.uint32(y), np.uint32(z)))
+    assert int(morton.encode3_np(np.uint32(x + 1), np.uint32(y), np.uint32(z))) > c
+    if y + 1 < morton.max_grid_dim():
+        assert int(morton.encode3_np(np.uint32(x), np.uint32(y + 1), np.uint32(z))) > c
+    if z + 1 < morton.max_grid_dim():
+        assert int(morton.encode3_np(np.uint32(x), np.uint32(y), np.uint32(z + 1))) > c
+
+
+@settings(deadline=None, max_examples=20)
+@given(octet=st.integers(0, (1 << 27) // 8 - 1), level=st.integers(1, 3))
+def test_morton_zorder_locality(octet, level):
+    """Z-order locality, both exact forms the morton force tiles rely on:
+    (1) consecutive codes inside an aligned octet move by at most one step
+    per coordinate; (2) an aligned run of 8**level codes decodes to an
+    aligned 2**level cube — a contiguous block of layout ranks covers a
+    compact 3D region."""
+    run = 8 ** level
+    base = (octet * 8 // run) * run
+    codes = np.arange(base, base + run, dtype=np.uint32)
+    xs, ys, zs = (np.asarray(v) for v in morton.decode3(jnp.asarray(codes)))
+    # (1) within each octet, consecutive codes are Chebyshev-adjacent
+    for lo in range(0, run, 8):
+        dx = np.abs(np.diff(xs[lo:lo + 8].astype(np.int64)))
+        dy = np.abs(np.diff(ys[lo:lo + 8].astype(np.int64)))
+        dz = np.abs(np.diff(zs[lo:lo + 8].astype(np.int64)))
+        assert dx.max(initial=0) <= 1 and dy.max(initial=0) <= 1 and dz.max(initial=0) <= 1
+    # (2) the whole run is an aligned 2**level cube
+    side = 1 << level
+    for vs in (xs, ys, zs):
+        assert vs.max() - vs.min() <= side - 1
+        assert vs.min() % side == 0
+
+
+def test_morton_out_of_range_wraps_not_bleeds():
+    """Out-of-range regression: coordinates ≥ max_grid_dim() wrap mod 1024
+    inside their own bit lane instead of corrupting the other coordinates,
+    and the grid layer clips cell coords before ever encoding."""
+    m = morton.max_grid_dim()
+    a = morton.encode3(jnp.uint32(m), jnp.uint32(1), jnp.uint32(2))
+    b = morton.encode3(jnp.uint32(0), jnp.uint32(1), jnp.uint32(2))
+    assert int(a) == int(b)
+    # max in-range code fills exactly 30 bits — no overflow into uint32 sign
+    top = morton.encode3(jnp.uint32(m - 1), jnp.uint32(m - 1), jnp.uint32(m - 1))
+    assert int(top) == (1 << 30) - 1
+    # grid layer: positions far outside the domain land in clipped edge cells
+    from repro.core.grid import cell_coords
+    spec = spec_for_space(0.0, 20.0, 4.0, max_per_cell=8)
+    wild = jnp.asarray([[-1e6, 5.0, 5.0], [5.0, 1e6, 5.0], [1e9, -1e9, 1e9]],
+                       jnp.float32)
+    ijk = np.asarray(cell_coords(spec, wild))
+    assert ijk.min() >= 0
+    assert (ijk < np.asarray(spec.dims)).all()
+
+
+@settings(deadline=None, max_examples=20)
+@given(
+    nx=st.integers(1, 32), ny=st.integers(1, 32), nz=st.integers(1, 32),
+    use_morton=st.booleans(),
+)
+def test_zorder_cells_is_permutation_inverse_of_cell_zrank(nx, ny, nz, use_morton):
+    """The trace-time layout tables are mutually inverse permutations, and in
+    morton mode they order cells by ascending Morton code."""
+    dims = (nx, ny, nz)
+    order = morton.zorder_cells(dims, use_morton)
+    rank = morton.cell_zrank(dims, use_morton)
+    n = nx * ny * nz
+    assert sorted(order.tolist()) == list(range(n))
+    np.testing.assert_array_equal(rank[order], np.arange(n, dtype=np.int32))
+    np.testing.assert_array_equal(order[rank], np.arange(n, dtype=np.int32))
+    if use_morton:
+        codes = _grid_codes(dims)
+        assert (np.diff(codes[order].astype(np.int64)) > 0).all()
+    else:
+        np.testing.assert_array_equal(order, np.arange(n, dtype=np.int32))
 
 
 def _brute_force_neighbors(pos, radius):
@@ -192,6 +325,142 @@ def test_build_parity_ghost_extended():
         )
         alive = jnp.asarray(rng.random(128) < 0.75)
         _assert_build_parity(spec, position, alive)
+
+
+# ---------------------------------------------------------------------------
+# Sort-free layout sort (ISSUE 8 tentpole a): sort_agents must reproduce the
+# retired argsort permutation bit-exactly — same slot per agent, same tie
+# order within a cell, dead agents compacted to the back.
+# ---------------------------------------------------------------------------
+
+def _assert_pool_equal(got, want, msg=""):
+    np.testing.assert_array_equal(
+        np.asarray(got.alive), np.asarray(want.alive), err_msg=f"alive {msg}"
+    )
+    np.testing.assert_array_equal(
+        np.asarray(got.position), np.asarray(want.position),
+        err_msg=f"position {msg}",
+    )
+    for field in ("diameter", "kind", "age", "static"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(got, field)), np.asarray(getattr(want, field)),
+            err_msg=f"{field} {msg}",
+        )
+    assert got.attrs.keys() == want.attrs.keys()
+    for name in want.attrs:
+        np.testing.assert_array_equal(
+            np.asarray(got.attrs[name]), np.asarray(want.attrs[name]),
+            err_msg=f"attr {name} {msg}",
+        )
+
+
+def _assert_sort_parity(spec, pool, tile=16):
+    want = sort_agents_argsort(spec, pool)
+    for impl in ("xla", "pallas"):
+        got = sort_agents(
+            dataclasses.replace(spec, rank_impl=impl), pool, rank_tile=tile
+        )
+        _assert_pool_equal(got, want, msg=f"({impl})")
+
+
+def _random_attr_pool(rng, n, cap, lo, hi):
+    position = rng.uniform(lo, hi, (n, 3)).astype(np.float32)
+    pool = make_pool(
+        cap,
+        jnp.asarray(position),
+        diameter=jnp.asarray(rng.uniform(1.0, 4.0, n).astype(np.float32)),
+        kind=jnp.asarray(rng.integers(0, 3, n).astype(np.int32)),
+        attrs={"tag": jnp.asarray(np.arange(n, dtype=np.int32))},
+    )
+    # Kill a random subset so dead agents are interleaved, not just padding.
+    dead = jnp.asarray(rng.random(cap) < 0.3)
+    return pool.replace(alive=pool.alive & ~dead)
+
+
+def test_sort_parity_random_pools():
+    for seed in range(4):
+        rng = np.random.default_rng(seed)
+        spec = spec_for_space(0.0, 20.0, 4.0, max_per_cell=4)
+        pool = _random_attr_pool(rng, int(rng.integers(5, 90)), 96, 0.0, 20.0)
+        _assert_sort_parity(spec, pool)
+
+
+def test_sort_parity_linear_layout():
+    rng = np.random.default_rng(11)
+    spec = spec_for_space(0.0, 20.0, 4.0, max_per_cell=4, use_morton=False)
+    pool = _random_attr_pool(rng, 70, 96, 0.0, 20.0)
+    _assert_sort_parity(spec, pool)
+
+
+def test_sort_parity_overflowing_cells():
+    """Sorting is independent of max_per_cell; a pool far over capacity per
+    cell still permutes identically (overflow only truncates the *build*)."""
+    rng = np.random.default_rng(5)
+    spec = spec_for_space(0.0, 8.0, 4.0, max_per_cell=2)  # 2×2×2 cells
+    pool = _random_attr_pool(rng, 60, 64, 0.0, 8.0)
+    _assert_sort_parity(spec, pool)
+
+
+def test_sort_parity_all_dead():
+    rng = np.random.default_rng(6)
+    spec = spec_for_space(0.0, 10.0, 2.0, max_per_cell=4)
+    pool = _random_attr_pool(rng, 33, 48, 0.0, 10.0)
+    pool = pool.replace(alive=jnp.zeros((48,), bool))
+    _assert_sort_parity(spec, pool)
+
+
+def test_sort_parity_ghost_extended_spec():
+    """The halo-extended spec of the distributed engine: origin below the
+    local domain, positions spilling into the aura bands."""
+    from repro.core.distributed import DomainConfig
+
+    dcfg = DomainConfig(
+        mesh_axes=("x", "y"), axis_sizes=(2, 2), extent=30.0,
+        halo_width=3.0, halo_capacity=16, migrate_capacity=8, depth=30.0,
+    )
+    spec = dcfg.grid_spec(box_size=3.0, max_per_cell=3)
+    rng = np.random.default_rng(42)
+    pool = _random_attr_pool(rng, 100, 128, -3.0, 33.0)
+    _assert_sort_parity(spec, pool)
+
+
+def test_sorted_fast_path_build_parity():
+    """After sort_agents, build_index_arrays(assume_sorted=True) (rank =
+    row − cell_start, no cell_rank pass) must equal the argsort-oracle
+    build on the same sorted arrays."""
+    for seed, use_morton in [(0, True), (1, True), (2, False)]:
+        rng = np.random.default_rng(seed)
+        spec = spec_for_space(0.0, 20.0, 4.0, max_per_cell=3,
+                              use_morton=use_morton)
+        pool = _random_attr_pool(rng, 80, 96, 0.0, 20.0)
+        pool = sort_agents(spec, pool)
+        want = build_index_arrays_argsort(spec, pool.position, pool.alive)
+        got = build_index_arrays(
+            spec, pool.position, pool.alive, assume_sorted=True
+        )
+        np.testing.assert_array_equal(
+            np.asarray(got.cell_of_agent), np.asarray(want.cell_of_agent)
+        )
+        np.testing.assert_array_equal(
+            np.asarray(got.cell_list), np.asarray(want.cell_list)
+        )
+        np.testing.assert_array_equal(
+            np.asarray(got.cell_count), np.asarray(want.cell_count)
+        )
+        assert bool(got.overflowed) == bool(want.overflowed)
+
+
+def test_sort_agents_lowers_without_hlo_sort():
+    """The zero-sort guarantee itself, asserted at the unit level: the
+    jitted layout sort contains no HLO sort op (the argsort fallback only
+    engages past morton.MAX_TABLE_CELLS)."""
+    import jax
+
+    spec = spec_for_space(0.0, 20.0, 4.0, max_per_cell=4)
+    rng = np.random.default_rng(3)
+    pool = _random_attr_pool(rng, 50, 64, 0.0, 20.0)
+    hlo = jax.jit(lambda p: sort_agents(spec, p)).lower(pool).as_text()
+    assert hlo.count("sort(") == 0, "layout sort still lowers an HLO sort"
 
 
 # ---------------------------------------------------------------------------
