@@ -16,6 +16,7 @@
 | bench_fused_force     | DESIGN.md §4 fused cell-list force HBM bytes    |
 | bench_dist_fused      | §6.2 distributed fused force + sort-free packing|
 | bench_morton_layout   | §5.4.2 sort-free Z-order layout × morton tiles  |
+| bench_many_sim        | DESIGN.md §8 many-sim serving vs sequential     |
 
 Smoke tier: `scripts/bench.sh` (BENCH_SMOKE=1) shrinks problem sizes so every
 target executes end-to-end in minutes — benchmark bit-rot fails fast in CI.
@@ -36,6 +37,7 @@ from . import (
     bench_dist_fused,
     bench_fused_force,
     bench_halo_packing,
+    bench_many_sim,
     bench_moe_token_sort,
     bench_morton_layout,
     bench_neighbor_search,
@@ -57,6 +59,7 @@ ALL = {
     "fused_force": bench_fused_force,
     "dist_fused": bench_dist_fused,
     "morton_layout": bench_morton_layout,
+    "many_sim": bench_many_sim,
 }
 
 

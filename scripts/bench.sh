@@ -11,6 +11,12 @@
 # results/bench/smoke/ — they never clobber the tracked numbers in
 # results/bench/.  Extra args are forwarded to `benchmarks.run`
 # (e.g. `scripts/bench.sh --only dist_fused`).
+#
+# bench_many_sim rides this tier too: its smoke run shrinks the batch
+# widths but still executes the vmapped serving scan end-to-end, asserts
+# slot-vs-solo bit-exactness, and runs guard() — the compile-only
+# bytes/step/sim drift check at the TRACKED width against the committed
+# results/bench/many_sim.json (DESIGN.md §8).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 

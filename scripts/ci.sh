@@ -21,12 +21,18 @@
 #     ≥1.3x bytes win vs linear fused, zero HLO sorts at sort_frequency=1);
 #   * bench_sort_frequency asserts the whole step lowers with ZERO sorts at
 #     EVERY sort_frequency — the §5.4.2 layout sort must stay a
-#     counting-sort permutation (ISSUE 8).
+#     counting-sort permutation (ISSUE 8);
+#   * bench_many_sim asserts slot-vs-solo bit-exactness of the batched
+#     serving scan and re-probes batched bytes/step/sim at the tracked
+#     width (5% drift vs results/bench/many_sim.json, DESIGN.md §8).
 # The example smoke tier (scripts/examples.sh) runs each use-case example a
 # handful of steps through the `Simulation` model API (DESIGN.md §6).
 # The kill-and-resume tier (DESIGN.md §7) SIGKILLs a checkpointed run
 # mid-flight, resumes it from disk, and asserts the recovered observable
 # series hashes identically to an uninterrupted run.
+# The serving tier (DESIGN.md §8) continuous-batches 3 sessions over the
+# slot pool, evicts a NaN-bombed one on its per-slot HealthReport, and
+# asserts the survivors' series hash identically to solo runs.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -80,6 +86,62 @@ if [ "$REF_SHA" != "$RES_SHA" ]; then
     exit 1
 fi
 echo "kill-and-resume smoke OK (series bit-identical)"
+
+echo
+echo "=== CI tier 5: serving smoke (continuous batching, DESIGN.md §8) ==="
+# Admit 3 sessions into the slot pool, NaN-bomb one mid-run via the
+# attr-borne trigger (tests/faults.nan_bomb_attr_op — state, not structure,
+# so all sessions share ONE compiled program), and assert: the sick session
+# is evicted on its per-slot HealthReport, and the survivors' observable
+# series hash bit-identically to solo runs of the same seeds.
+python - <<'EOF'
+import hashlib
+
+import jax
+import numpy as np
+
+from tests import faults
+from repro.core import behaviors
+from repro.core.api import Simulation
+from repro.launch.abm_serve import SessionRequest, serve
+
+def sha(obs):
+    h = hashlib.sha256()
+    for name in sorted(obs):
+        h.update(name.encode())
+        h.update(np.ascontiguousarray(np.asarray(obs[name])).tobytes())
+    return h.hexdigest()
+
+rng = np.random.default_rng(6)
+built = (
+    Simulation(space=20.0, cell_size=4.0, boundary="toroidal", dt=1.0,
+               capacity=16, max_per_cell=8, sort_frequency=4, seed=0)
+    .add_agents(position=rng.uniform(0, 20, (16, 3)), diameter=1.0,
+                nan_bomb_at=np.full(16, 2**30, np.int32))
+    .use(behaviors.random_movement(1.0))
+    .observe_kinds(n_kinds=2, frequency=2)
+    .op(faults.nan_bomb_attr_op(), name="nan_bomb", phase="post")
+    .build()
+)
+requests = [
+    SessionRequest(name="clean0", n_steps=12, seed=21),
+    SessionRequest(name="sick", n_steps=12, seed=22,
+                   params={"attr:nan_bomb_at": np.int32(3)}),
+    SessionRequest(name="clean1", n_steps=12, seed=23),
+]
+results = {r.name: r for r in serve(built, requests, slots=3, chunk=4)}
+assert results["sick"].status == "evicted", results["sick"]
+assert results["sick"].health["nonfinite_agents"] >= 1
+for name, seed in (("clean0", 21), ("clean1", 23)):
+    r = results[name]
+    assert r.status == "done" and r.steps == 12, (name, r.status, r.steps)
+    solo_state = built.batched().session_state(seed=seed)
+    _, solo_obs = built.run_jit(12, state=solo_state)
+    got, want = sha(r.obs), sha(solo_obs)
+    print(f"{name}: served sha256={got[:16]} solo sha256={want[:16]}")
+    assert got == want, f"{name} served series diverged from solo run"
+print("serving smoke OK (NaN session evicted; survivors bit-identical)")
+EOF
 
 echo
 echo "CI gate passed."

@@ -22,9 +22,11 @@ Subpackages:
 # `repro.core` import would lock the device backend first (see
 # launch/mesh.py's module-constant note).
 _API = ("Simulation", "BuiltSimulation", "DistributedSimulation", "Observable")
+# Batch-serving layer (DESIGN.md §8) — same laziness contract.
+_BATCH_API = ("BatchedSimulation", "BatchState")
 
-__all__ = list(_API)
-__version__ = "1.1.0"
+__all__ = list(_API) + list(_BATCH_API)
+__version__ = "1.2.0"
 
 
 def __getattr__(name: str):
@@ -32,4 +34,8 @@ def __getattr__(name: str):
         from repro.core import api
 
         return getattr(api, name)
+    if name in _BATCH_API:
+        from repro.core import batch
+
+        return getattr(batch, name)
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

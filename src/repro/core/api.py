@@ -37,7 +37,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -532,6 +532,18 @@ class Simulation:
         ``checkpoint_every=`` pass through for fault-tolerant runs."""
         return self.build(seed=seed).run_jit(n_steps, **run_kwargs)
 
+    def run_batch(self, n_steps: int,
+                  params: Optional[Dict[str, Any]] = None, *,
+                  seeds: Optional[Sequence[int]] = None,
+                  batch: Optional[int] = None, seed: Optional[int] = None):
+        """Build + sweep B independent variants of this model through one
+        compiled batched scan → ``(stacked finals, {name: (B, rows, ...)})``.
+        See :meth:`BuiltSimulation.run_batch` for the override namespace;
+        slot b is bit-exactly the solo ``run_jit`` of that variant."""
+        return self.build(seed=seed).run_batch(
+            n_steps, params, seeds=seeds, batch=batch
+        )
+
     def resume(self, checkpoint_dir: str, seed: Optional[int] = None,
                **resume_kwargs):
         """Rebuild this model and finish an interrupted checkpointed run —
@@ -862,11 +874,24 @@ class BuiltSimulation:
         )
 
     @functools.cached_property
+    def _runner_cache(self):
+        # One runner per execution signature, for the BuiltSimulation's
+        # lifetime — nothing global.  Keyed so the solo jit wrapper and the
+        # batched (vmapped) engine coexist: ``("solo",)`` holds the scalar
+        # jit wrapper (chunked runs reuse its compiled scan), ``("batch",)``
+        # holds the BatchedSimulation whose own wrapper keys on the slot
+        # width — mixing run_jit and run_batch never evicts or re-traces
+        # the other's program (regression: tests/test_batch.py).
+        return {}
+
+    @property
     def _jitted(self):
-        # One jit wrapper per built simulation: chunked runs (repeated
-        # run_jit on an evolving state) reuse the compiled scan, and the
-        # wrapper's lifetime is the BuiltSimulation's — nothing global.
-        return _engine.jitted_runner(self.config, self.scheduler)
+        cache = self._runner_cache
+        if ("solo",) not in cache:
+            cache[("solo",)] = _engine.jitted_runner(
+                self.config, self.scheduler
+            )
+        return cache[("solo",)]
 
     def _execute(self, n_steps: int, state, jit: bool):
         state = self.state if state is None else state
@@ -951,6 +976,58 @@ class BuiltSimulation:
             target - step, state, jit, checkpoint_dir, every, keep, on_chunk,
             obs_acc=acc, target_step=target,
         )
+
+    # ---------------------------------------------------- batched serving
+
+    def batched(self):
+        """The many-simulation engine for this model (DESIGN.md §8): a
+        :class:`~repro.core.batch.BatchedSimulation` vmapping the same
+        scheduler step over a leading slot axis of independent session
+        states, with the built state as the validation template.  Cached in
+        the runner cache alongside the solo jit wrapper, so batched and
+        solo compiles coexist for the model's lifetime."""
+        from . import batch as _batch
+
+        cache = self._runner_cache
+        if ("batch",) not in cache:
+            cache[("batch",)] = _batch.BatchedSimulation(
+                self.config, self.scheduler, self.state, self.observables
+            )
+        return cache[("batch",)]
+
+    def run_batch(self, n_steps: int, params: Optional[Dict[str, Any]] = None,
+                  *, seeds: Optional[Sequence[int]] = None,
+                  batch: Optional[int] = None):
+        """Sweep B parameter variants through ONE compiled scan.
+
+        ``params`` maps override keys to per-slot values with a leading
+        slot axis: ``"attr:NAME"`` sets initial agent-attr values (scalar
+        per slot, or per-agent over the registered agents), and
+        ``"substance:NAME"`` sets initial concentrations (uniform scalar
+        per slot, or a full field) — per-slot *op constants* ride as attrs
+        the op reads.  ``seeds`` gives slot ``b`` its own
+        ``PRNGKey(seeds[b])`` stream (default: ``fold_in(built_rng, b)``);
+        ``batch`` forces the width when neither implies it.
+
+        Returns ``(finals, obs)``: the stacked final states (every leaf
+        with a leading B axis — ``jax.tree.map(lambda l: l[b], finals)``
+        is slot b's final state) and ``obs[name]`` of shape
+        ``(B, rows, ...)``.  Bit-exact per slot: slot b equals a solo
+        ``run_jit`` of that variant (asserted in tests/test_batch.py and
+        in-bench by benchmarks/bench_many_sim.py).
+        """
+        eng = self.batched()
+        bstate = eng.sweep_state(batch=batch, seeds=seeds, params=params)
+        bstate, obs, counts = eng.run_jit(bstate, n_steps)
+        # Sweep slots share the built start step, so every slot fired the
+        # same rows — trim the ⌈n/k⌉-row buffers once, host-side.
+        if obs:
+            fired = {
+                k: int(np.asarray(jax.device_get(v))[0])
+                for k, v in counts.items()
+            }
+            obs = {k: v[:, : fired[k]] for k, v in obs.items()}
+        return bstate.states, obs
 
 
 @dataclasses.dataclass(frozen=True)

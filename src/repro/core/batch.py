@@ -1,0 +1,586 @@
+"""Many-simulation batch engine: one compiled step, B independent sessions.
+
+The thesis motivates the platform by parameter exploration — the cost of one
+simulation bounds how many scenarios a modeler can sweep — and the serving
+north star (ROADMAP) is the same amortization applied to users: many small
+independent simulations should share every fixed cost one simulation pays
+(trace + XLA compile, per-step dispatch, host loop), exactly like the LM
+decode loop batches independent sequences through one compiled decode step.
+
+A built model is already a pure step over a pytree
+(:class:`~repro.core.engine.SimulationState`), so the batch engine is
+``jax.vmap`` over a leading slot axis plus slot lifecycle:
+
+  * :class:`BatchState` — B stacked ``SimulationState``s (one pytree, every
+    leaf grows a leading slot axis) + a per-slot ``active`` mask and an
+    absolute per-slot step budget ``stop_step``.  A slot is *live* when
+    ``active & (step < stop_step)``; non-live slots pass through each scan
+    iteration untouched (their state, RNG, step counter, and observable
+    buffers are bit-frozen), so finished / empty slots are no-ops and a
+    serving driver can admit and evict between chunks without reshaping or
+    recompiling anything.
+  * :func:`batched_run` — ``lax.scan`` over iterations of the vmapped
+    scheduler step, recording observables *in-scan* into per-slot row
+    buffers (each slot fires by its own step counter, so slots admitted at
+    different chunk offsets keep exact frequency-k semantics).
+  * :class:`BatchedSimulation` — the lifecycle surface: build sweep states
+    (per-slot RNG streams + per-slot parameter overrides), inject a
+    checkpoint-grade session state into a free slot, evict a finished slot,
+    all validated against the built template so a foreign state (wrong
+    capacity, wrong schema) is rejected naming the slot.
+
+Bit-exactness contract (tests/test_batch.py): slot ``b`` of a batched run
+equals a solo run of that state, leaf for leaf, including frequency-k
+observable series and misaligned chunk starts.  Per-slot dynamics stay
+independent under vmap — every reduction in the step is within-slot, so one
+session's NaN cannot leak into another slot (the serving driver evicts the
+sick session via its per-slot :class:`~repro.core.schedule.HealthReport`
+instead of poisoning the batch).  Frequency-``cond`` gates lower to selects
+under a per-slot predicate (both branches computed, gated slot-wise) — the
+values are bit-identical to the solo ``lax.cond`` by construction.
+
+The per-sim *work* is unchanged — what the batch amortizes is everything
+around it: one trace + one compile + one scan dispatch serve B sessions
+(``benchmarks/bench_many_sim.py`` tracks sims/sec against B sequential
+facade ``run_jit`` sweeps, which pay the compile per session).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .engine import SimulationState
+from .schedule import Scheduler
+
+Array = jax.Array
+
+#: Budget sentinel: a step bound no session reaches (i32-safe).
+NO_BUDGET = np.int32(2**31 - 1)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class BatchState:
+    """B independent simulations as one pytree.
+
+    states:    a ``SimulationState`` whose every leaf carries a leading slot
+               axis of size B (slot ``b``'s simulation is
+               ``tree.map(lambda l: l[b], states)``).
+    active:    (B,) bool — slot occupancy.  Inactive slots hold placeholder
+               state (usually the built template) and are bit-frozen.
+    stop_step: (B,) i32 — absolute per-slot step budget.  A live slot
+               freezes (becomes a no-op, mid-chunk if need be) once its step
+               counter reaches it; :data:`NO_BUDGET` disables the bound.
+    """
+
+    states: SimulationState
+    active: Array
+    stop_step: Array
+
+    @property
+    def batch_size(self) -> int:
+        return self.active.shape[0]
+
+    def live(self) -> Array:
+        """(B,) bool — slots that will advance on the next iteration."""
+        return self.active & (self.states.step < self.stop_step)
+
+
+def _broadcast_leaf(leaf: Array, batch: int) -> Array:
+    return jnp.broadcast_to(leaf[None], (batch,) + leaf.shape)
+
+
+def broadcast_template(template: SimulationState, batch: int) -> SimulationState:
+    """Replicate one state across ``batch`` slots (leaves gain a slot axis)."""
+    return jax.tree.map(lambda l: _broadcast_leaf(jnp.asarray(l), batch),
+                        template)
+
+
+def slot_state(bstate: BatchState, slot: int) -> SimulationState:
+    """Extract slot ``slot``'s simulation as a solo ``SimulationState``."""
+    return jax.tree.map(lambda l: l[slot], bstate.states)
+
+
+# ---------------------------------------------------------------------------
+# The batched runner
+# ---------------------------------------------------------------------------
+
+
+def _slot_proto(bstates: SimulationState):
+    """Shape/dtype skeleton of ONE slot's state (for ``jax.eval_shape``)."""
+    return jax.tree.map(
+        lambda l: jax.ShapeDtypeStruct(l.shape[1:], l.dtype), bstates
+    )
+
+
+def batched_run(
+    config,
+    bstate: BatchState,
+    n_steps: int,
+    scheduler: Optional[Scheduler] = None,
+    observables: Optional[Tuple[Tuple[str, Callable, int], ...]] = None,
+):
+    """Run ``n_steps`` iterations of the vmapped step over a slot batch.
+
+    Per iteration: the scheduler step runs vmapped over the slot axis, then
+    every non-live slot's state is rolled back to its pre-step value — a
+    select, so frozen slots are *bit*-frozen (step counter, RNG fold, and
+    health telemetry included) and a slot that exhausts its ``stop_step``
+    budget mid-scan stops exactly on it.
+
+    Observables are the engine's ``(name, fn, frequency)`` triples recorded
+    per slot: slot ``b`` fires on iterations whose pre-increment step
+    counter is ``≡ 0 (mod k)`` *by its own counter*, writing
+    ``vmap(fn)(state)[b]`` into row ``counts[b]`` of a ``⌈n_steps/k⌉``-row
+    buffer (rows beyond a slot's firing count stay zero — the driver slices
+    by the returned counts).  The evaluation is gated on any slot firing,
+    so a frequency-100 snapshot still costs ~1/100th.
+
+    Returns ``(bstate', obs, counts)`` with ``obs[name]`` of shape
+    ``(B, ⌈n_steps/k⌉, ...)`` and ``counts[name]`` (B,) i32 rows written.
+    """
+    step_fn = (scheduler or Scheduler.default(config)).step
+    vstep = jax.vmap(step_fn)
+    batch = bstate.batch_size
+
+    obs = tuple(observables or ())
+    names = [n for n, _, _ in obs]
+    if len(set(names)) != len(names):
+        raise ValueError(f"duplicate observable names in {names}")
+    live_obs = tuple((n, f, k) for n, f, k in obs if k > 0)
+
+    protos = jax.eval_shape(
+        lambda s: {name: fn(s) for name, fn, _ in live_obs},
+        _slot_proto(bstate.states),
+    )
+    rows_of = {name: -(-int(n_steps) // k) for name, _, k in live_obs}
+    bufs0 = {
+        name: jnp.zeros((rows_of[name], batch) + tuple(protos[name].shape),
+                        protos[name].dtype)
+        for name, _, _ in live_obs
+    }
+    idx0 = {name: jnp.zeros((batch,), jnp.int32) for name, _, _ in live_obs}
+    active, stop = bstate.active, bstate.stop_step
+    lanes = jnp.arange(batch)
+
+    def body(carry, _):
+        states, bufs, idx = carry
+        pre_step = states.step                      # (B,) pre-increment
+        live = active & (pre_step < stop)
+        stepped = vstep(states)
+
+        def select(new, old):
+            mask = live.reshape(live.shape + (1,) * (new.ndim - 1))
+            return jnp.where(mask, new, old)
+
+        states = jax.tree.map(select, stepped, states)
+        bufs, idx = dict(bufs), dict(idx)
+        for name, fn, k in live_obs:
+            fires = live & (pre_step % k == 0)
+
+            def write(buf, i, _fn=fn, _fires=fires, _name=name):
+                rows = jax.vmap(_fn)(states)
+                at = jnp.where(_fires, i, rows_of[_name])   # miss → dropped
+                return buf.at[at, lanes].set(rows, mode="drop"), i + _fires
+
+            bufs[name], idx[name] = jax.lax.cond(
+                jnp.any(fires), write, lambda b, i: (b, i),
+                bufs[name], idx[name],
+            )
+        return (states, bufs, idx), None
+
+    (final, bufs, idx), _ = jax.lax.scan(
+        body, (bstate.states, bufs0, idx0), None, length=n_steps
+    )
+    out = {name: jnp.moveaxis(buf, 1, 0) for name, buf in bufs.items()}
+    return dataclasses.replace(bstate, states=final), out, idx
+
+
+def jitted_batched_runner(config, scheduler: Optional[Scheduler] = None):
+    """One reusable jit wrapper for :func:`batched_run` (the batch analog of
+    :func:`~repro.core.engine.jitted_runner`).  The wrapper's cache keys on
+    the batch shapes and the static ``n_steps``/``observables``, so chunked
+    serving reuses one compiled scan per (B, chunk) signature."""
+    return jax.jit(
+        functools.partial(batched_run, config, scheduler=scheduler),
+        static_argnames=("n_steps", "observables"),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Per-slot parameter overrides (the run_batch sweep surface)
+# ---------------------------------------------------------------------------
+
+
+def _apply_slot_params(
+    state: SimulationState,
+    params: Dict[str, Array],
+    n_registered: int,
+):
+    """Apply one slot's override values to one (unbatched) state.
+
+    Key namespace (validated host-side by the callers):
+
+      ``"attr:NAME"``       initial value for agent attr NAME — a scalar
+                            (broadcast over the registered agents; dead
+                            padding rows keep their build-time zeros, so the
+                            result is bit-identical to declaring the value
+                            in ``add_agents``) or a per-agent ``(n, ...)``
+                            array over the ``n`` registered agents.
+      ``"substance:NAME"``  initial concentration for substance NAME — a
+                            scalar (uniform field) or a full
+                            ``(nx, ny, nz)`` field.
+
+    Static model structure (behavior constants, force params, frequencies)
+    cannot vary per slot inside one compiled program — per-slot *op
+    constants* ride as agent attrs read by the op (see DESIGN.md §8).
+
+    Pure and shape-static, so the sweep construction vmaps it over slots.
+    """
+    pool, grids = state.pool, dict(state.grids)
+    for key, value in params.items():
+        space, _, name = key.partition(":")
+        value = jnp.asarray(value)
+        if space == "attr":
+            arr = pool.attrs[name]
+            if value.ndim == 0:
+                fill = jnp.broadcast_to(
+                    value.astype(arr.dtype), arr.shape[1:]
+                )
+                fill = jnp.broadcast_to(fill[None], arr.shape)
+            else:
+                pad = [(0, arr.shape[0] - n_registered)] + [(0, 0)] * (
+                    value.ndim - 1
+                )
+                fill = jnp.pad(value.astype(arr.dtype), pad)
+            mask = pool.alive.reshape((-1,) + (1,) * (arr.ndim - 1))
+            pool = pool.set_attr(name, jnp.where(mask, fill, arr))
+        elif space == "substance":
+            grid = grids[name]
+            conc = jnp.broadcast_to(
+                value.astype(jnp.float32), grid.concentration.shape
+            )
+            grids[name] = dataclasses.replace(grid, concentration=conc)
+        else:
+            raise ValueError(
+                f"unknown override target {key!r} — use 'attr:NAME' or "
+                f"'substance:NAME' (per-slot op constants ride as attrs)"
+            )
+    return dataclasses.replace(state, pool=pool, grids=grids)
+
+
+def _check_params(
+    template: SimulationState,
+    params: Dict[str, Any],
+    n_registered: int,
+    batch: Optional[int],
+) -> int:
+    """Host-side sweep validation: every override names a registered target
+    and carries a leading slot axis of one consistent size.  Returns B."""
+    for key, value in params.items():
+        space, _, name = key.partition(":")
+        value = np.asarray(value)
+        if space == "attr":
+            if name not in template.pool.attrs:
+                raise ValueError(
+                    f"override {key!r}: no attr {name!r} registered "
+                    f"(have {sorted(template.pool.attrs)})"
+                )
+            trailing = template.pool.attrs[name].shape[1:]
+            per_agent = (n_registered,) + trailing
+            if value.ndim != 1 and value.shape[1:] != per_agent:
+                raise ValueError(
+                    f"override {key!r}: per-slot value must be scalar "
+                    f"(shape (B,)) or per-agent (shape (B, {n_registered})"
+                    f"{' + ' + str(trailing) if trailing else ''}), got "
+                    f"{value.shape}"
+                )
+        elif space == "substance":
+            if name not in template.grids:
+                raise ValueError(
+                    f"override {key!r}: no substance {name!r} registered "
+                    f"(have {sorted(template.grids)})"
+                )
+            res = tuple(template.grids[name].concentration.shape)
+            if value.ndim != 1 and value.shape[1:] != res:
+                raise ValueError(
+                    f"override {key!r}: per-slot value must be scalar "
+                    f"(shape (B,)) or a full field (shape (B,) + {res}), "
+                    f"got {value.shape}"
+                )
+        else:
+            raise ValueError(
+                f"unknown override target {key!r} — use 'attr:NAME' or "
+                f"'substance:NAME' (per-slot op constants ride as attrs)"
+            )
+        if value.ndim == 0 or value.shape[0] in (0, None):
+            raise ValueError(
+                f"override {key!r} needs a leading slot axis, got shape "
+                f"{value.shape}"
+            )
+        if batch is None:
+            batch = int(value.shape[0])
+        elif int(value.shape[0]) != batch:
+            raise ValueError(
+                f"override {key!r} has {value.shape[0]} slots but the sweep "
+                f"is {batch} wide (seeds/overrides must agree)"
+            )
+    if batch is None:
+        raise ValueError(
+            "cannot infer the sweep width — pass batch=, seeds=, or at "
+            "least one per-slot override"
+        )
+    return batch
+
+
+# ---------------------------------------------------------------------------
+# The lifecycle surface
+# ---------------------------------------------------------------------------
+
+
+class BatchedSimulation:
+    """Slot-pool lifecycle over one built model.
+
+    Holds the ``(EngineConfig, Scheduler, observables)`` of a
+    :class:`~repro.core.api.BuiltSimulation` plus its initial state as the
+    *template*: the single source of truth for what a valid session state
+    looks like (pool capacity, attr schema, grid shapes).  Construct via
+    ``BuiltSimulation.batched()`` — that keeps the jit wrapper in the built
+    model's runner cache, so batched and solo compiles coexist.
+    """
+
+    def __init__(self, config, scheduler: Scheduler,
+                 template: SimulationState, observables=()):
+        self.config = config
+        self.scheduler = scheduler
+        self.template = template
+        self.observables = tuple(observables)
+        self.n_registered = int(np.asarray(
+            jax.device_get(template.pool.alive)).sum())
+        self._runner = jitted_batched_runner(config, scheduler)
+
+    # -- observable plumbing (the facade's triples) -------------------------
+
+    def _obs_triples(self):
+        return tuple(
+            (o.name, o.fn, o.frequency)
+            for o in self.observables if o.frequency > 0
+        )
+
+    # -- state construction -------------------------------------------------
+
+    def empty_state(self, batch: int) -> BatchState:
+        """An all-inactive slot pool of the template (a serving driver's
+        starting point: admit sessions via :meth:`inject`)."""
+        return BatchState(
+            states=broadcast_template(self.template, batch),
+            active=jnp.zeros((batch,), bool),
+            stop_step=jnp.full((batch,), NO_BUDGET, jnp.int32),
+        )
+
+    def session_state(
+        self,
+        seed: Optional[int] = None,
+        params: Optional[Dict[str, Any]] = None,
+        stream: Optional[int] = None,
+    ) -> SimulationState:
+        """One fresh session from the template: its own RNG stream
+        (``seed`` → ``PRNGKey(seed)``; else ``fold_in(template.rng,
+        stream)``) and optional per-session overrides (unbatched values in
+        the :func:`_apply_slot_params` namespace)."""
+        if seed is not None:
+            rng = jax.random.PRNGKey(int(seed))
+        else:
+            rng = jax.random.fold_in(self.template.rng, int(stream or 0))
+        state = dataclasses.replace(self.template, rng=rng)
+        if params:
+            batched = {k: np.asarray(v)[None] for k, v in params.items()}
+            _check_params(self.template, batched, self.n_registered, 1)
+            state = _apply_slot_params(state, dict(params), self.n_registered)
+        return state
+
+    def sweep_state(
+        self,
+        batch: Optional[int] = None,
+        seeds: Optional[Sequence[int]] = None,
+        params: Optional[Dict[str, Any]] = None,
+    ) -> BatchState:
+        """A B-wide parameter sweep: the template replicated across slots,
+        per-slot RNG streams, and per-slot overrides broadcast in.
+
+        ``params`` values carry a leading slot axis (see
+        :func:`_apply_slot_params` for the key namespace); ``seeds`` (B,)
+        gives each slot ``PRNGKey(seeds[b])``, defaulting to
+        ``fold_in(template.rng, b)`` — distinct, deterministic streams.
+        """
+        if seeds is not None:
+            seeds = np.asarray(seeds)
+            if seeds.ndim != 1:
+                raise ValueError(f"seeds must be 1-D, got shape {seeds.shape}")
+            if batch is None:
+                batch = int(seeds.shape[0])
+            elif batch != int(seeds.shape[0]):
+                raise ValueError(
+                    f"batch={batch} but seeds has {seeds.shape[0]} entries"
+                )
+        if params:
+            batch = _check_params(
+                self.template, params, self.n_registered, batch
+            )
+        if batch is None:
+            raise ValueError(
+                "cannot infer the sweep width — pass batch=, seeds=, or at "
+                "least one per-slot override"
+            )
+
+        states = broadcast_template(self.template, batch)
+        if seeds is not None:
+            keys = jax.vmap(lambda s: jax.random.PRNGKey(s))(
+                jnp.asarray(seeds, jnp.int32)
+            )
+        else:
+            keys = jax.vmap(
+                lambda b: jax.random.fold_in(self.template.rng, b)
+            )(jnp.arange(batch))
+        states = dataclasses.replace(states, rng=keys)
+        if params:
+            apply = functools.partial(
+                _apply_slot_params, n_registered=self.n_registered
+            )
+            states = jax.vmap(lambda st, p: apply(st, p))(
+                states, {k: jnp.asarray(v) for k, v in params.items()}
+            )
+        return BatchState(
+            states=states,
+            active=jnp.ones((batch,), bool),
+            stop_step=jnp.full((batch,), NO_BUDGET, jnp.int32),
+        )
+
+    # -- slot validation ----------------------------------------------------
+
+    def validate_slot_state(self, state: SimulationState, slot: Any) -> None:
+        """Checkpoint-grade admission check: ``state`` must be *this*
+        model's state, leaf for leaf.  A pool whose capacity disagrees with
+        the declared config is the canonical mistake (a session built
+        against a differently-sized model) and gets a dedicated error
+        naming the slot and both capacities; any other structure / shape /
+        dtype divergence is named by its tree path."""
+        got_cap = int(state.pool.position.shape[0])
+        want_cap = int(self.template.pool.position.shape[0])
+        if got_cap != want_cap:
+            raise ValueError(
+                f"slot {slot}: injected state has pool capacity {got_cap}, "
+                f"but this model was built with capacity {want_cap} — "
+                f"sessions must be built against the serving model's config"
+            )
+        want = jax.tree_util.tree_flatten_with_path(self.template)
+        got = jax.tree_util.tree_flatten_with_path(state)
+        if jax.tree_util.tree_structure(state) != jax.tree_util.tree_structure(
+            self.template
+        ):
+            raise ValueError(
+                f"slot {slot}: injected state's pytree structure does not "
+                f"match the built model (different attrs/substances?)"
+            )
+        for (path, w), (_, g) in zip(want[0], got[0]):
+            if tuple(w.shape) != tuple(g.shape) or w.dtype != g.dtype:
+                raise ValueError(
+                    f"slot {slot}: leaf {jax.tree_util.keystr(path)} has "
+                    f"shape {tuple(g.shape)} dtype {g.dtype}, model declares "
+                    f"{tuple(w.shape)} {w.dtype}"
+                )
+
+    def stack(
+        self,
+        states: Sequence[SimulationState],
+        budgets: Optional[Sequence[int]] = None,
+    ) -> BatchState:
+        """Stack explicit session states into a fully-active batch (every
+        state validated against the template, errors naming the slot).
+        ``budgets[b]`` bounds slot ``b`` to that many further steps."""
+        if not states:
+            raise ValueError("stack needs at least one state")
+        for b, st in enumerate(states):
+            self.validate_slot_state(st, b)
+        stacked = jax.tree.map(lambda *ls: jnp.stack(ls), *states)
+        batch = len(states)
+        stop = jnp.full((batch,), NO_BUDGET, jnp.int32)
+        if budgets is not None:
+            if len(budgets) != batch:
+                raise ValueError(
+                    f"{len(budgets)} budgets for {batch} states"
+                )
+            stop = stacked.step + jnp.asarray(budgets, jnp.int32)
+        return BatchState(
+            states=stacked, active=jnp.ones((batch,), bool), stop_step=stop
+        )
+
+    # -- slot lifecycle (between chunks; host-side) -------------------------
+
+    def inject(
+        self,
+        bstate: BatchState,
+        slot: int,
+        state: SimulationState,
+        budget: Optional[int] = None,
+    ) -> BatchState:
+        """Admit a session into a free slot: checkpoint-grade state
+        injection (validated against the template) + activation.  ``budget``
+        bounds the session to that many further steps from its current
+        counter."""
+        slot = int(slot)
+        if bool(np.asarray(jax.device_get(bstate.active))[slot]):
+            raise ValueError(f"slot {slot} is occupied — evict it first")
+        self.validate_slot_state(state, slot)
+        states = jax.tree.map(
+            lambda L, l: L.at[slot].set(l), bstate.states, state
+        )
+        stop = NO_BUDGET if budget is None else (
+            np.asarray(jax.device_get(state.step), np.int32) + int(budget)
+        )
+        return BatchState(
+            states=states,
+            active=bstate.active.at[slot].set(True),
+            stop_step=bstate.stop_step.at[slot].set(jnp.int32(stop)),
+        )
+
+    def evict(
+        self, bstate: BatchState, slot: int
+    ) -> Tuple[SimulationState, BatchState]:
+        """Retire slot ``slot``: return its session state (checkpoint-grade
+        — resumable later via :meth:`inject`) and the batch with the slot
+        freed (state left in place but bit-frozen)."""
+        slot = int(slot)
+        state = slot_state(bstate, slot)
+        return state, dataclasses.replace(
+            bstate,
+            active=bstate.active.at[slot].set(False),
+            stop_step=bstate.stop_step.at[slot].set(NO_BUDGET),
+        )
+
+    # -- execution ----------------------------------------------------------
+
+    def run(self, bstate: BatchState, n_steps: int):
+        """Un-jitted batched run (tracing / debugging)."""
+        return batched_run(
+            self.config, bstate, n_steps,
+            scheduler=self.scheduler, observables=self._obs_triples() or None,
+        )
+
+    def run_jit(self, bstate: BatchState, n_steps: int):
+        """Jitted batched run → ``(bstate', obs, counts)``.
+
+        One jit wrapper per ``BatchedSimulation``; its cache keys on the
+        batch shapes + static ``n_steps``, so a serving loop driving chunks
+        of one size compiles exactly once, and different batch widths
+        coexist without evicting each other or the solo runner.
+        """
+        return self._runner(
+            bstate, n_steps=n_steps, observables=self._obs_triples() or None
+        )

@@ -1,9 +1,15 @@
-"""Batched serving driver: prefill a batch of prompts, then decode.
+"""LM decode serving driver: prefill a batch of prompts, then decode.
 
     PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-1.6b --reduced \
         --batch 4 --prompt-len 32 --gen 32
 
-Demonstrates the serving path end to end on CPU with reduced configs: the
+This is the *language-model* serving path (the repo's LM stack, DESIGN.md
+§9): a batch of token sequences decoded through one compiled `decode_step`.
+For serving *simulations* — B independent ABM sessions continuously batched
+through one compiled vmapped scan — use `launch/abm_serve.py` (DESIGN.md
+§8), which applies this loop's idiom to simulation state.
+
+Demonstrates the decode path end to end on CPU with reduced configs: the
 prompt is prefilled token-by-token into the cache (the production prefill
 uses the chunked-attention forward; see launch/dryrun.py prefill cells),
 then tokens are sampled greedily with one compiled `decode_step` for all
@@ -25,7 +31,11 @@ from repro.models.params import unzip
 
 
 def main(argv=None):
-    ap = argparse.ArgumentParser(description=__doc__)
+    ap = argparse.ArgumentParser(
+        description="LM decode serving demo: batched greedy decode through "
+        "one compiled decode_step (reduced configs, CPU). For ABM session "
+        "serving see `python -m repro.launch.abm_serve`."
+    )
     ap.add_argument("--arch", default="rwkv6-1.6b")
     ap.add_argument("--reduced", action="store_true", default=True)
     ap.add_argument("--batch", type=int, default=4)

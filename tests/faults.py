@@ -87,6 +87,24 @@ def nan_bomb_op(at_step: int):
     return nan_bomb
 
 
+def nan_bomb_attr_op(attr: str = "nan_bomb_at"):
+    """`nan_bomb_op` with the trigger step carried by agent-0's ``attr``
+    value instead of a compile-time constant: every session shares ONE
+    compiled program, and which sessions blow up (and when) is pure state —
+    a per-slot override in a batched sweep, or a request param in the
+    serving smoke (scripts/ci.sh tier 5).  Declare the attr with a sentinel
+    default (e.g. 2**30) so sessions without an override never trigger."""
+    import jax.numpy as jnp
+
+    def nan_bomb(ctx, state):
+        pos = state.pool.position
+        hit = state.step >= state.pool.attrs[attr][0].astype(state.step.dtype)
+        pos = pos.at[0, 0].set(jnp.where(hit, jnp.nan, pos[0, 0]))
+        return dataclasses.replace(state, pool=state.pool.replace(position=pos))
+
+    return nan_bomb
+
+
 def dividing_sim(capacity: int, n0: int = 24, seed: int = 7,
                  division_probability: float = 0.4, space: float = 40.0):
     """A facade model whose population roughly ×1.4s per step — any fixed

@@ -1,0 +1,223 @@
+"""Batch-engine semantics (DESIGN.md §8, ISSUE 9).
+
+The contract under test: a slot of a batched run is *bit-identical* to a
+solo run of that session — one engine, no batch-only dynamics — while the
+slot lifecycle (inactive slots, budgets, admit/evict between chunks) only
+ever freezes or thaws whole slots.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import behaviors
+from repro.core.api import Simulation
+from repro.core.forces import ForceParams
+
+
+def _model(n=24, seed=3, infect=0, sort_frequency=4, obs_freq=2):
+    rng = np.random.default_rng(11)
+    return (
+        Simulation(space=24.0, cell_size=4.0, boundary="toroidal", dt=1.0,
+                   capacity=n, max_per_cell=8, sort_frequency=sort_frequency,
+                   seed=seed)
+        .add_agents(position=rng.uniform(0, 24, (n, 3)), diameter=1.0,
+                    kind=0, infect=np.full(n, infect, np.int32))
+        .use(behaviors.random_movement(1.0))
+        .observe("mean_pos", lambda s: s.pool.position.mean(axis=0),
+                 frequency=obs_freq)
+        .observe("pop", lambda s: s.pool.alive.sum().astype(jnp.int32))
+    )
+
+
+def _assert_states_equal(a, b, msg=""):
+    fa = jax.tree_util.tree_flatten_with_path(a)[0]
+    fb = jax.tree_util.tree_flatten_with_path(b)[0]
+    for (path, w), (_, g) in zip(fa, fb):
+        assert np.array_equal(np.asarray(jax.device_get(w)),
+                              np.asarray(jax.device_get(g))), (
+            f"{msg}: leaf {jax.tree_util.keystr(path)} diverged"
+        )
+
+
+# ------------------------------------------------------- slot == solo
+
+
+def test_sweep_slot_bitexact_vs_solo_including_observables():
+    built = _model().build()
+    seeds = [101, 202, 303]
+    finals, obs = built.run_batch(7, seeds=seeds)
+    # freq-2 observable over 7 steps fires at 0,2,4,6 -> 4 rows
+    assert obs["mean_pos"].shape == (3, 4, 3)
+    assert obs["pop"].shape == (3, 7)
+    eng = built.batched()
+    for b, seed in enumerate(seeds):
+        sf, so = built.run_jit(7, state=eng.session_state(seed=seed))
+        _assert_states_equal(sf, jax.tree.map(lambda l: l[b], finals),
+                             f"slot {b}")
+        for name in so:
+            assert np.array_equal(np.asarray(so[name]),
+                                  np.asarray(obs[name][b])), (b, name)
+
+
+def test_attr_override_bitexact_vs_declared_model():
+    # A per-slot attr override must equal a model that *declared* the value
+    # in add_agents — same zero-padded pool construction, same RNG key.
+    finals, _ = _model(seed=0).build().run_batch(
+        5, {"attr:infect": np.array([2, 9], np.int32)}, seeds=[40, 41]
+    )
+    for b, (seed, infect) in enumerate([(40, 2), (41, 9)]):
+        declared = _model(seed=seed, infect=infect).build()
+        sf, _ = declared.run_jit(5)
+        _assert_states_equal(sf, jax.tree.map(lambda l: l[b], finals),
+                             f"slot {b} (declared infect={infect})")
+
+
+def test_misaligned_chunk_starts_keep_freq_k_observables_exact():
+    # Slots whose step counters disagree (one mid-run, one fresh) must each
+    # fire frequency-k observables by their OWN counter.
+    built = _model(sort_frequency=3, obs_freq=3).build()
+    eng = built.batched()
+    fresh = eng.session_state(seed=5)
+    ahead, _ = built.run_jit(4, state=eng.session_state(seed=6))  # step=4
+    bstate = eng.stack([fresh, ahead])
+    bstate, obs, counts = eng.run_jit(bstate, 6)
+    # fresh fires at 0,3 within [0,6) -> 2 rows; ahead at 6,9 within [4,10)
+    assert np.asarray(counts["mean_pos"]).tolist() == [2, 2]
+    solo_fresh, obs_fresh = built.run_jit(6, state=fresh)
+    solo_ahead, obs_ahead = built.run_jit(6, state=ahead)
+    _assert_states_equal(
+        solo_fresh, jax.tree.map(lambda l: l[0], bstate.states), "fresh")
+    _assert_states_equal(
+        solo_ahead, jax.tree.map(lambda l: l[1], bstate.states), "ahead")
+    for b, solo in ((0, obs_fresh), (1, obs_ahead)):
+        got = np.asarray(obs["mean_pos"][b][: int(counts["mean_pos"][b])])
+        assert np.array_equal(np.asarray(solo["mean_pos"]), got), b
+
+
+# --------------------------------------------------- lifecycle semantics
+
+
+def test_inactive_slots_are_bit_frozen():
+    built = _model().build()
+    eng = built.batched()
+    bstate = eng.empty_state(3)
+    bstate = eng.inject(bstate, 1, eng.session_state(seed=8))
+    before = [jax.tree.map(lambda l: l[b], bstate.states) for b in (0, 2)]
+    bstate, _, _ = eng.run_jit(bstate, 5)
+    assert int(bstate.states.step[1]) == 5
+    for b, prior in zip((0, 2), before):
+        _assert_states_equal(
+            prior, jax.tree.map(lambda l: l[b], bstate.states),
+            f"inactive slot {b}")
+
+
+def test_per_slot_rng_streams():
+    built = _model().build()
+    finals, _ = built.run_batch(4, seeds=[5, 5, 9], batch=3)
+    same = np.asarray(finals.pool.position)
+    assert np.array_equal(same[0], same[1])      # same seed -> same run
+    assert not np.array_equal(same[0], same[2])  # different seed -> differs
+    # default streams (no seeds): fold_in(template_rng, slot) are distinct
+    finals2, _ = built.run_batch(4, batch=2)
+    pos2 = np.asarray(finals2.pool.position)
+    assert not np.array_equal(pos2[0], pos2[1])
+
+
+def test_budget_freezes_slot_mid_scan_and_evict_resume_is_deterministic():
+    built = _model().build()
+    eng = built.batched()
+    s0 = eng.session_state(seed=12)
+    noise = eng.session_state(seed=77)
+    # 6 budgeted steps inside a 9-step chunk, alongside other traffic ...
+    bstate = eng.stack([s0, noise], budgets=[6, 9])
+    bstate, _, _ = eng.run_jit(bstate, 9)
+    assert int(bstate.states.step[0]) == 6
+    mid, bstate = eng.evict(bstate, 0)
+    # ... then resumed in a DIFFERENT slot of a different batch: the
+    # composite must equal the uninterrupted solo run.
+    b2 = eng.empty_state(3)
+    b2 = eng.inject(b2, 2, mid, budget=4)
+    b2, _, _ = eng.run_jit(b2, 7)
+    assert int(b2.states.step[2]) == 10
+    solo, _ = built.run_jit(10, state=s0)
+    _assert_states_equal(solo, jax.tree.map(lambda l: l[2], b2.states),
+                         "evict/inject resume")
+
+
+# ------------------------------------------------ validation + cache
+
+
+def test_inject_rejects_capacity_mismatch_naming_slot_and_capacities():
+    eng = _model(n=24).build().batched()
+    foreign = _model(n=32).build().state
+    with pytest.raises(ValueError,
+                       match=r"slot 1.*capacity 32.*capacity 24"):
+        eng.inject(eng.empty_state(2), 1, foreign)
+    with pytest.raises(ValueError,
+                       match=r"slot 0.*capacity 32.*capacity 24"):
+        eng.stack([foreign])
+
+
+def test_inject_rejects_schema_mismatch_and_occupied_slot():
+    built = _model().build()
+    eng = built.batched()
+    other = dataclasses.replace(
+        built.state,
+        pool=built.state.pool.replace(
+            position=built.state.pool.position.astype(jnp.float64)
+            if jax.config.jax_enable_x64 else
+            built.state.pool.position.astype(jnp.float16)
+        ),
+    )
+    with pytest.raises(ValueError, match=r"slot 0.*position"):
+        eng.inject(eng.empty_state(1), 0, other)
+    bstate = eng.inject(eng.empty_state(1), 0, built.state)
+    with pytest.raises(ValueError, match="occupied"):
+        eng.inject(bstate, 0, built.state)
+
+
+def test_run_batch_rejects_bad_override_keys_and_widths():
+    built = _model().build()
+    with pytest.raises(ValueError, match="no attr 'nope'"):
+        built.run_batch(2, {"attr:nope": np.zeros(2)})
+    with pytest.raises(ValueError, match="unknown override target"):
+        built.run_batch(2, {"substanceX:q": np.zeros(2)})
+    with pytest.raises(ValueError, match="2 slots.*3 wide"):
+        built.run_batch(2, {"attr:infect": np.zeros(2, np.int32)},
+                        seeds=[1, 2, 3])
+    with pytest.raises(ValueError, match="sweep width"):
+        built.run_batch(2)
+
+
+def test_solo_and_batched_runners_coexist_without_retracing():
+    # Satellite: the runner cache keys solo vs batched signatures, so
+    # interleaving run_jit and run_batch never re-traces either program.
+    traces = {"n": 0}
+
+    def counting(ctx, state):
+        traces["n"] += 1
+        return state
+
+    sim = _model()
+    sim.op(counting, name="trace_counter", phase="post")
+    built = sim.build()
+
+    built.run_jit(3)
+    solo_traces = traces["n"]
+    assert solo_traces >= 1
+    built.run_jit(3)
+    assert traces["n"] == solo_traces          # solo memoized (PR 4)
+
+    built.run_batch(3, seeds=[1, 2])
+    batch_traces = traces["n"]
+    assert batch_traces > solo_traces          # batched program traced ...
+    built.run_batch(3, seeds=[3, 4])
+    assert traces["n"] == batch_traces         # ... once per signature
+
+    built.run_jit(3)
+    assert traces["n"] == batch_traces         # solo program survived
+    assert set(built._runner_cache) == {("solo",), ("batch",)}

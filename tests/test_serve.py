@@ -1,0 +1,127 @@
+"""Continuous-batching session server (launch/abm_serve, DESIGN.md §8).
+
+Lifecycle under test: more sessions than slots flow through a fixed pool in
+chunks, each retiring with a series bit-identical to its solo run; a
+NaN-ing session is evicted on its per-slot HealthReport without touching
+its neighbors; a retired session's final state re-enters as a resume.
+"""
+
+import jax
+import numpy as np
+
+import faults
+from repro.core import behaviors
+from repro.core.api import Simulation
+from repro.launch.abm_serve import SessionRequest, serve
+
+
+def _model(n=16, bomb=False):
+    rng = np.random.default_rng(2)
+    sim = (
+        Simulation(space=20.0, cell_size=4.0, boundary="toroidal", dt=1.0,
+                   capacity=n, max_per_cell=8, sort_frequency=4, seed=0)
+        .add_agents(position=rng.uniform(0, 20, (n, 3)), diameter=1.0,
+                    kind=0,
+                    nan_bomb_at=np.full(n, 2**30, np.int32))
+        .use(behaviors.random_movement(1.0))
+        .observe_kinds(n_kinds=2, frequency=2)
+    )
+    if bomb:
+        # Trigger rides agent state, so bombed and clean sessions share one
+        # compiled program — which sessions blow up is a request param.
+        sim.op(faults.nan_bomb_attr_op("nan_bomb_at"), name="nan_bomb",
+               phase="post")
+    return sim.build()
+
+
+def _solo_series(built, seed, n_steps, params=None):
+    state = built.batched().session_state(seed=seed, params=params)
+    _, obs = built.run_jit(n_steps, state=state)
+    return {k: np.asarray(jax.device_get(v)) for k, v in obs.items()}
+
+
+def test_serve_more_sessions_than_slots_matches_solo_series():
+    built = _model()
+    reqs = [SessionRequest(name=f"s{i}", n_steps=10, seed=50 + i)
+            for i in range(5)]
+    results = serve(built, reqs, slots=2, chunk=4, log=None)
+    assert sorted(r.name for r in results) == [f"s{i}" for i in range(5)]
+    for r in results:
+        assert r.status == "done" and r.steps == 10
+        solo = _solo_series(built, 50 + int(r.name[1:]), 10)
+        assert set(r.obs) == set(solo)
+        for k in solo:
+            assert np.array_equal(solo[k], r.obs[k]), (r.name, k)
+
+
+def test_serve_evicts_nan_session_and_survivors_stay_exact():
+    built = _model(bomb=True)
+    reqs = [
+        SessionRequest(name="clean0", n_steps=12, seed=7),
+        SessionRequest(name="sick", n_steps=12, seed=8,
+                       params={"attr:nan_bomb_at": np.int32(3)}),
+        SessionRequest(name="clean1", n_steps=12, seed=9),
+    ]
+    results = {r.name: r for r in serve(built, reqs, slots=3, chunk=4,
+                                        log=None)}
+    assert results["sick"].status == "evicted"
+    assert results["sick"].health["nonfinite_agents"] >= 1
+    assert results["sick"].steps < 12
+    for name, seed in (("clean0", 7), ("clean1", 9)):
+        r = results[name]
+        assert r.status == "done" and r.steps == 12
+        assert r.health["nonfinite_agents"] == 0
+        solo = _solo_series(built, seed, 12)
+        for k in solo:
+            assert np.array_equal(solo[k], r.obs[k]), (name, k)
+
+
+def test_serve_without_eviction_keeps_sick_session_to_budget():
+    built = _model(bomb=True)
+    reqs = [SessionRequest(name="sick", n_steps=8, seed=4,
+                           params={"attr:nan_bomb_at": np.int32(2)})]
+    (r,) = serve(built, reqs, slots=1, chunk=4, evict_unhealthy=False,
+                 log=None)
+    assert r.status == "done" and r.steps == 8
+    assert r.health["nonfinite_agents"] >= 1
+
+
+def test_serve_budget_not_multiple_of_chunk_and_resume_via_state():
+    built = _model()
+    (first,) = serve(
+        built, [SessionRequest(name="a", n_steps=7, seed=33)],
+        slots=2, chunk=4, log=None,
+    )
+    assert first.steps == 7  # froze mid-chunk exactly on its budget
+    # Re-admit the retired state as a resume to step 11.
+    (second,) = serve(
+        built, [SessionRequest(name="a2", n_steps=11, state=first.final)],
+        slots=2, chunk=4, log=None,
+    )
+    assert second.steps == 11
+    solo_final, solo_obs = built.run_jit(
+        11, state=built.batched().session_state(seed=33)
+    )
+    fa = jax.tree_util.tree_flatten_with_path(solo_final)[0]
+    fb = jax.tree_util.tree_flatten_with_path(second.final)[0]
+    for (path, w), (_, g) in zip(fa, fb):
+        assert np.array_equal(np.asarray(jax.device_get(w)),
+                              np.asarray(jax.device_get(g))), (
+            jax.tree_util.keystr(path)
+        )
+    # The two serve legs' series concatenate to the solo series.
+    for k, solo in solo_obs.items():
+        joined = np.concatenate([first.obs[k], second.obs[k]])
+        assert np.array_equal(np.asarray(jax.device_get(solo)), joined), k
+
+
+def test_serve_rejects_exhausted_injection():
+    built = _model()
+    (done,) = serve(built, [SessionRequest(name="x", n_steps=4, seed=1)],
+                    slots=1, chunk=4, log=None)
+    import pytest
+
+    with pytest.raises(ValueError, match="already at step"):
+        serve(built, [SessionRequest(name="x2", n_steps=4,
+                                     state=done.final)],
+              slots=1, chunk=4, log=None)

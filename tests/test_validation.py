@@ -1,6 +1,6 @@
 """Faithful-reproduction validation: the paper's own correctness claims.
 
-These are the tests that certify the *reproduction* (DESIGN.md §9):
+These are the tests that certify the *reproduction* (DESIGN.md §10):
   * SIR agent-based model matches the Kermack–McKendrick analytical
     solution (Fig 4.17 / §4.6.3);
   * soma clustering emerges (Fig 4.18 / §4.7.1);
