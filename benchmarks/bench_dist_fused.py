@@ -73,7 +73,7 @@ dcfg = DomainConfig(
     mesh_axes=("data", "model"), axis_sizes=(2, 2), extent=space,
     halo_width=radius, halo_capacity=max(n_per_dev // 4, 64),
     migrate_capacity=max(n_per_dev // 8, 64), depth=space,
-    halo_codec=%(halo_codec)r,
+    halo_codec=%(halo_codec)r, overlap_halo=%(overlap)s,
 )
 spec = dcfg.grid_spec(box_size=radius, max_per_cell=m)
 ecfg = EngineConfig(
@@ -102,6 +102,10 @@ out = {
 packing_hlo = make_packing_program(mesh, dcfg).lower(state).as_text()
 out["packing_sorts"] = hlo_sort_count(packing_hlo)
 out["step_sorts"] = hlo_sort_count(lowered.as_text())
+# ISSUE 10: def-use reachability over the compiled (scheduled) module —
+# which force-pass conditionals have the halo collective as an ancestor.
+from repro.core.distributed import hlo_overlap_report
+out["overlap"] = hlo_overlap_report(compiled.as_text())
 # Positive control: the sort detector must still see a real argsort.
 import jax, jax.numpy as jnp
 det = jax.jit(jnp.argsort).lower(jnp.zeros((64,), jnp.float32)).as_text()
@@ -113,11 +117,12 @@ print(json.dumps(out))
 def _probe(
     src: str, n: int, m: int, impl: str, fallback: bool,
     sort_frequency: int = 8, halo_codec: str = "int16",
+    overlap: bool = False,
 ) -> dict:
     code = _PROBE % {
         "src": os.path.abspath(src), "n": n, "m": m,
         "impl": impl, "fallback": fallback, "sort_frequency": sort_frequency,
-        "halo_codec": halo_codec,
+        "halo_codec": halo_codec, "overlap": overlap,
     }
     proc = subprocess.run(
         [sys.executable, "-c", code], capture_output=True, text=True, timeout=900
@@ -186,6 +191,17 @@ def run(fast: bool = True):
          int8["packing_sorts"], int8["step_sorts"])
     )
 
+    # ISSUE 10: the overlapped halo schedule, compile-only.  The interior
+    # force conditional must have ZERO halo-scoped collective-permute
+    # ancestors in the scheduled module (XLA may run the exchange
+    # concurrently with it); the shell pass is the positive control.
+    overlap_on = _probe(src, n, m, "fused", False, overlap=True)
+    out["step"]["overlap_on"] = overlap_on
+    rows.append(
+        ("step/overlap_on", f"{overlap_on['bytes_accessed']/1e6:.1f}",
+         overlap_on["packing_sorts"], overlap_on["step_sorts"])
+    )
+
     ratio = (
         out["step"]["dense"]["bytes_accessed"]
         / out["step"]["fused"]["bytes_accessed"]
@@ -212,6 +228,34 @@ def run(fast: bool = True):
         assert rec["step_sorts"] == 0, (
             f"{name}: whole step must be sort-free, got {rec['step_sorts']}"
         )
+    # ISSUE 10 overlap gates (compile-only, def-use reachability on the
+    # scheduled HLO): the interior pass never reads the halo collective,
+    # the shell pass does (positive control), and the serial schedule's
+    # single force pass depends on it (negative control).
+    ov = out["step"]["overlap_on"]["overlap"]
+    assert ov["halo_collectives"] > 0, "overlap_on: no halo collectives seen"
+    assert ov["interior_forces"]["conditionals"] >= 1, (
+        "overlap_on: interior force conditional not found"
+    )
+    assert ov["interior_forces"]["halo_collective_ancestors"] == 0, (
+        "overlap_on: halo collective is an ancestor of the interior pass"
+    )
+    assert ov["shell_forces"]["halo_collective_ancestors"] > 0, (
+        "overlap_on: shell pass must depend on the halo collective"
+    )
+    sv = out["step"]["fused"]["overlap"]
+    assert sv["forces"]["conditionals"] >= 1, (
+        "serial: force conditional not found"
+    )
+    assert sv["forces"]["halo_collective_ancestors"] > 0, (
+        "serial: force pass must depend on the halo collective"
+    )
+    print(
+        "overlap probe: interior halo-ancestors="
+        f"{ov['interior_forces']['halo_collective_ancestors']} "
+        f"shell={ov['shell_forces']['halo_collective_ancestors']} "
+        f"serial forces={sv['forces']['halo_collective_ancestors']}"
+    )
     path = save_result("dist_fused_force", out)
     print("saved:", path)
     return out

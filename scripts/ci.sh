@@ -33,6 +33,10 @@
 # The serving tier (DESIGN.md §8) continuous-batches 3 sessions over the
 # slot pool, evicts a NaN-bombed one on its per-slot HealthReport, and
 # asserts the survivors' series hash identically to solo runs.
+# The overlapped-halo tier (ISSUE 10, DESIGN.md §4) runs the serial and
+# overlapped distributed schedules on the full 8-device (4×2) mesh and
+# asserts their final-state sha256 hashes are identical — the bit-exactness
+# contract behind DomainConfig.overlap_halo.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -142,6 +146,11 @@ for name, seed in (("clean0", 21), ("clean1", 23)):
     assert got == want, f"{name} served series diverged from solo run"
 print("serving smoke OK (NaN session evicted; survivors bit-identical)")
 EOF
+
+echo
+echo "=== CI tier 6: overlapped-halo smoke (serial/overlap hash equality) ==="
+XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+    python tests/dist_scenarios.py overlap_smoke8
 
 echo
 echo "CI gate passed."

@@ -641,43 +641,81 @@ class Simulation:
 
     def _split_grids(self, dcfg) -> Dict[str, dgrid.DiffusionGrid]:
         """Split each global substance grid into per-device local grids
-        (stacked on a leading device axis).  Decomposed dims must divide the
-        resolution evenly; local grids live in the device-local frame
-        (origin 0), matching the rebased agent coordinates."""
+        (stacked on a leading device axis), in the device-local frame
+        (origin 0) matching the rebased agent coordinates.
+
+        Uneven splits use *ghost-voxel padding*: every device carries a
+        uniform ``ceil(R/S)``-voxel frame (static SPMD shapes); devices
+        past the end of the global lattice pad with zeros, and the grid's
+        ``n_valid`` / ``frame_shift`` metadata masks the padding out of
+        diffusion and sampling (see :class:`~repro.core.diffusion
+        .DiffusionGrid`).  A resolution smaller than the mesh still raises
+        (some device would own no voxels at all along the short dim),
+        as does an uneven split under a toroidal boundary (the padded face
+        would break the periodic wrap alignment)."""
         out: Dict[str, dgrid.DiffusionGrid] = {}
         nd = dcfg.n_decomposed
         for name, grid in self._grids.items():
             res = grid.concentration.shape
-            bad = [
-                d for d in range(nd)
-                if res[d] % dcfg.axis_sizes[d] != 0
-            ]
-            if bad:
+            small = [d for d in range(nd) if res[d] < dcfg.axis_sizes[d]]
+            if small:
                 detail = ", ".join(
-                    f"dim {d}: {res[d]} % {dcfg.axis_sizes[d]} != 0"
-                    for d in bad
+                    f"dim {d}: {res[d]} < {dcfg.axis_sizes[d]}" for d in small
                 )
                 raise ValueError(
-                    f"substance {name!r}: resolution does not divide the "
-                    f"mesh decomposition evenly on dims {bad} ({detail}); "
-                    f"uneven splits need ghost-voxel padding (unsupported — "
-                    f"see ROADMAP), so pick a resolution divisible by the "
-                    f"device counts on every decomposed dim"
+                    f"substance {name!r}: resolution smaller than the mesh "
+                    f"on dims {small} ({detail}); every decomposed dim needs "
+                    f"at least one voxel per device"
                 )
+            uneven = [d for d in range(nd) if res[d] % dcfg.axis_sizes[d] != 0]
+            if uneven and self.boundary == "toroidal":
+                raise ValueError(
+                    f"substance {name!r}: uneven split on dims {uneven} with "
+                    f"a toroidal boundary — ghost-voxel padding would break "
+                    f"the periodic wrap alignment; pick a resolution "
+                    f"divisible by the device counts on every decomposed dim"
+                )
+            per = [
+                -(-res[d] // dcfg.axis_sizes[d]) if d < nd else res[d]
+                for d in range(3)
+            ]
+            conc = np.asarray(jax.device_get(grid.concentration))
             locals_ = []
             for dev in range(dcfg.n_devices):
-                coords = dcfg.device_coords(dev)  # the agent-binning order
-                slices = tuple(
-                    slice(c * (res[d] // dcfg.axis_sizes[d]),
-                          (c + 1) * (res[d] // dcfg.axis_sizes[d]))
-                    if d < nd else slice(None)
-                    for d, c in enumerate(list(coords) + [0] * (3 - nd))
+                coords = list(dcfg.device_coords(dev)) + [0] * (3 - nd)
+                lo = [coords[d] * per[d] if d < nd else 0 for d in range(3)]
+                block = conc[tuple(
+                    slice(lo[d], min(lo[d] + per[d], res[d])) for d in range(3)
+                )]
+                block = np.pad(
+                    block, [(0, per[d] - block.shape[d]) for d in range(3)]
                 )
+                extra = {}
+                if uneven:
+                    extra = dict(
+                        n_valid=jnp.asarray(
+                            [
+                                min(per[d], max(res[d] - lo[d], 0))
+                                if d < nd else res[d]
+                                for d in range(3)
+                            ],
+                            jnp.int32,
+                        ),
+                        frame_shift=jnp.asarray(
+                            [
+                                lo[d] * grid.spacing - coords[d] * dcfg.extent
+                                if d < nd else 0.0
+                                for d in range(3)
+                            ],
+                            jnp.float32,
+                        ),
+                    )
                 locals_.append(
                     dataclasses.replace(
                         grid,
-                        concentration=grid.concentration[slices],
+                        concentration=jnp.asarray(block),
                         origin=(0.0, 0.0, 0.0),
+                        **extra,
                     )
                 )
             out[name] = jax.tree.map(lambda *xs: jnp.stack(xs), *locals_)

@@ -40,6 +40,24 @@ _INT_INFO = {
 }
 
 
+def seal(x: Array) -> Array:
+    """Value-identity rounding fence: pins ``x`` to one IEEE f32 rounding.
+
+    Cross-program bit-exactness (the serial↔overlapped distributed parity
+    contract) needs cheap producer arithmetic to evaluate identically in
+    *differently shaped* programs.  XLA:CPU freely duplicates such producers
+    into every consumer fusion and lets the code generator re-round each
+    copy — e.g. contracting a multiply-add like the codec's ``ref + q·s``
+    into an FMA in one program but not the other — a 1-ulp wobble that
+    ``optimization_barrier`` does **not** prevent, because the CPU pipeline
+    expands barriers away before fusion (grep an optimized module: no
+    ``opt-barrier`` survives).  A full-width ``reduce_precision`` is kept by
+    XLA, is the identity on every finite, denormal, infinite and NaN f32
+    value, and forces the sealed value to one canonical rounding wherever it
+    is rematerialized."""
+    return jax.lax.reduce_precision(x, exponent_bits=8, mantissa_bits=23)
+
+
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
 class DeltaCodec:
@@ -71,7 +89,9 @@ def encode(
     qmax = _INT_INFO[jnp.dtype(wire_dtype)]
     delta = (x - codec.ref) / s
     q = jnp.clip(jnp.round(delta), -qmax, qmax).astype(wire_dtype)
-    new_ref = codec.ref + q.astype(jnp.float32) * s
+    # seal: ref must advance bit-identically on both ends *and* in every
+    # program shape that embeds this codec (serial vs overlapped schedules).
+    new_ref = seal(codec.ref + q.astype(jnp.float32) * s)
     return q, dataclasses.replace(codec, ref=new_ref)
 
 
@@ -80,7 +100,7 @@ def decode(
 ) -> Tuple[Array, DeltaCodec]:
     """Receiver side: reconstruct and advance the reference."""
     s = codec.scale if scale is None else scale
-    x = codec.ref + payload.astype(jnp.float32) * s
+    x = seal(codec.ref + payload.astype(jnp.float32) * s)
     return x, dataclasses.replace(codec, ref=x)
 
 

@@ -28,7 +28,18 @@ Array = jax.Array
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
 class DiffusionGrid:
-    """One extracellular substance on a regular grid over the sim space."""
+    """One extracellular substance on a regular grid over the sim space.
+
+    ``n_valid`` / ``frame_shift`` support *ghost-voxel padding* (uneven
+    distributed substance splits, DESIGN.md §4): when a global resolution
+    does not divide the device mesh evenly, every device carries a uniform
+    ``ceil(R/S)``-voxel frame whose tail voxels beyond ``n_valid[d]`` are
+    padding — outside the simulated domain, pinned to zero by diffusion and
+    clipped out of sampling/secretion.  ``frame_shift[d]`` is the local
+    coordinate of the frame's low voxel corner (the global voxel lattice is
+    generally misaligned with the device frame when the split is uneven).
+    Both stay ``None`` single-node and for even splits — the grid then
+    behaves exactly as before."""
 
     concentration: Array  # (nx, ny, nz) float32
     # static metadata
@@ -36,6 +47,10 @@ class DiffusionGrid:
     spacing: float = dataclasses.field(metadata=dict(static=True))
     diffusion_coefficient: float = dataclasses.field(metadata=dict(static=True))
     decay_constant: float = dataclasses.field(metadata=dict(static=True))
+    # ghost-voxel padding metadata (per-device data, not static: the valid
+    # extent differs across devices in one SPMD program)
+    n_valid: Array | None = None       # (3,) i32 valid voxels per dim
+    frame_shift: Array | None = None   # (3,) f32 lattice offset of voxel 0
 
     @property
     def resolution(self) -> Tuple[int, int, int]:
@@ -101,12 +116,26 @@ def diffuse(grid: DiffusionGrid, dt: float, impl: str = "reference") -> Diffusio
 
 def _grid_coords(grid: DiffusionGrid, position: Array) -> Array:
     origin = jnp.asarray(grid.origin, jnp.float32)
-    rel = (position - origin) / grid.spacing - 0.5
+    rel = position - origin
+    if grid.frame_shift is not None:
+        rel = rel - grid.frame_shift
+    rel = rel / grid.spacing - 0.5
     return rel  # fractional voxel coordinates (cell-centered)
 
 
+def _effective_resolution(grid: DiffusionGrid) -> Array:
+    """(3,) i32 — the sampled extent: the valid voxel count when the grid
+    carries ghost-voxel padding, else the stored resolution.  Clipping to
+    it keeps padded voxels out of sampling and secretion (a position beyond
+    the last valid voxel clips onto it, matching the single-node edge
+    clip)."""
+    if grid.n_valid is not None:
+        return jnp.asarray(grid.n_valid, jnp.int32)
+    return jnp.asarray(grid.resolution, jnp.int32)
+
+
 def _nearest_voxel(grid: DiffusionGrid, position: Array) -> Array:
-    res = jnp.asarray(grid.resolution, jnp.int32)
+    res = _effective_resolution(grid)
     ijk = jnp.round(_grid_coords(grid, position)).astype(jnp.int32)
     return jnp.clip(ijk, 0, res - 1)
 
@@ -130,7 +159,7 @@ def concentration_at(grid: DiffusionGrid, position: Array) -> Array:
 
 def gradient_at(grid: DiffusionGrid, position: Array, normalized: bool = True) -> Array:
     """Central-difference gradient sampled at agent positions (Algorithm 7)."""
-    res = jnp.asarray(grid.resolution, jnp.int32)
+    res = _effective_resolution(grid)
     ijk = _nearest_voxel(grid, position)
 
     def sample(off: Tuple[int, int, int]) -> Array:

@@ -77,7 +77,7 @@ from . import diffusion as dgrid
 from .agents import AgentPool, compact_indices, free_slot_table, make_pool, remove_agents
 from .behaviors import StepContext
 from .engine import EngineConfig, count_kinds
-from .grid import GridSpec, build_index_arrays
+from .grid import GridSpec, build_index_arrays, cell_coords
 from .neighbors import NeighborContext
 from .schedule import (
     HealthReport,
@@ -85,7 +85,10 @@ from .schedule import (
     OpContext,
     Scheduler,
     apply_boundary,
+    apply_force,
     empty_health,
+    force_pass,
+    seal,
 )
 
 try:  # JAX >= 0.6
@@ -141,6 +144,13 @@ class DomainConfig:
     migrate_capacity: int
     depth: float = 0.0
     halo_codec: str = "int16"
+    # Overlap the halo collective with interior compute (DESIGN.md §4):
+    # the distributed schedule splits the force op into an interior pass
+    # over a local-only index (no ghost reads — data-independent of the
+    # exchange, so XLA may run the collective concurrently) and a
+    # boundary-shell pass over the ghost-extended index.  Bit-exact vs the
+    # serial schedule; opt-in because it costs a second (local) grid build.
+    overlap_halo: bool = False
 
     @property
     def n_decomposed(self) -> int:
@@ -215,6 +225,37 @@ class HaloCodecState:
 
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
+class GhostFrame:
+    """The double-buffered aura snapshot: the 2·D·H halo rows produced by
+    the latest ``halo_exchange``, carried in :class:`DistState`.
+
+    Contract (DESIGN.md §4, overlapped halo exchange): ``halo_exchange``
+    *writes* the frame each step; the ghost-extended environment build
+    *reads* it — under the overlapped schedule that read is the only
+    consumer edge of the collective, so the interior force pass (which
+    never touches the frame) is free of the collective in the dataflow
+    graph, and XLA's input/output buffer aliasing ping-pongs the two
+    physical copies across steps.  Rows are receiver-frame rebased, in
+    (dim, direction) channel order after the C local pool rows."""
+
+    position: Array  # (2·D·H, 3) f32
+    radius: Array    # (2·D·H,)   f32
+    kind: Array      # (2·D·H,)   i32
+    alive: Array     # (2·D·H,)   bool
+
+    @staticmethod
+    def create(dcfg: "DomainConfig") -> "GhostFrame":
+        n = 2 * dcfg.n_decomposed * dcfg.halo_capacity
+        return GhostFrame(
+            position=jnp.zeros((n, 3), jnp.float32),
+            radius=jnp.zeros((n,), jnp.float32),
+            kind=jnp.zeros((n,), jnp.int32),
+            alive=jnp.zeros((n,), bool),
+        )
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
 class DistState:
     """Per-device simulation state (stacked on a leading device axis).
 
@@ -235,6 +276,7 @@ class DistState:
     halo_payload_bytes: Array   # () i32
     halo_baseline_bytes: Array  # () i32
     health: HealthReport      # per-device telemetry (DESIGN.md §7)
+    ghost: GhostFrame         # latest aura snapshot (double buffer, §4)
 
 
 # ---------------------------------------------------------------------------
@@ -489,10 +531,43 @@ def halo_exchange(
 # ---------------------------------------------------------------------------
 
 
+def _padding_mask(grid: dgrid.DiffusionGrid):
+    """(nx, ny, nz) bool of *valid* voxels, or None when the grid carries no
+    ghost-voxel padding (``n_valid`` unset — the even-split / single-node
+    case).  Padded voxels sit beyond ``n_valid`` along each dim; they are
+    outside the simulated domain and must stay ≡ 0 (zero-outside boundary),
+    so diffusion masks them out of both the stencil input and the update."""
+    if grid.n_valid is None:
+        return None
+    shape = grid.concentration.shape
+    mask = jnp.ones(shape, bool)
+    for d in range(3):
+        bshape = [1, 1, 1]
+        bshape[d] = shape[d]
+        mask = mask & (
+            jnp.arange(shape[d], dtype=jnp.int32) < grid.n_valid[d]
+        ).reshape(bshape)
+    return mask
+
+
 def distributed_diffuse(
-    dcfg: DomainConfig, grid: dgrid.DiffusionGrid, dt: float
+    dcfg: DomainConfig, grid: dgrid.DiffusionGrid, dt: float,
+    boundary: str = "toroidal",
 ) -> dgrid.DiffusionGrid:
+    """One Eq-4.3 step with the 1-voxel stencil halo exchanged over the mesh.
+
+    ``boundary`` is the engine's §4.4.11 policy: "toroidal" keeps the ring
+    wrap at the mesh edges (the global space is a device torus); any other
+    value masks the wrapped face slices to zero at mesh-edge devices so the
+    domain's outer faces see the single-node engine's zero-outside
+    semantics instead of periodic-wrap concentrations.  Ghost-voxel padding
+    (``grid.n_valid``, uneven substance splits) is masked out of the
+    stencil and pinned to zero in the update.
+    """
     u = grid.concentration
+    mask = _padding_mask(grid)
+    if mask is not None:
+        u = jnp.where(mask, u, 0.0)
     padded = jnp.pad(u, 1)  # zero halo default (open boundary in z)
     for d in range(dcfg.n_decomposed):
         axis = dcfg.mesh_axes[d]
@@ -501,6 +576,13 @@ def distributed_diffuse(
         hi_face = jax.lax.slice_in_dim(u, u.shape[d] - 1, u.shape[d], axis=d)
         from_west = _shift(hi_face, axis, size, +1)   # west neighbor's top slice
         from_east = _shift(lo_face, axis, size, -1)   # east neighbor's bottom
+        if boundary != "toroidal":
+            # Mesh-edge devices: the ring delivered the opposite edge's
+            # face — the domain boundary is not periodic here, so the
+            # outside concentration is 0 (matches the single-node engine).
+            coord = jax.lax.axis_index(axis)
+            from_west = jnp.where(coord == 0, 0.0, from_west)
+            from_east = jnp.where(coord == size - 1, 0.0, from_east)
         # Place into padded halo positions (interior of the other dims).
         idx_lo = [slice(1, -1)] * 3
         idx_hi = [slice(1, -1)] * 3
@@ -519,6 +601,8 @@ def distributed_diffuse(
         - 6.0 * u
     ) / (grid.spacing**2)
     new = u * (1.0 - grid.decay_constant * dt) + grid.diffusion_coefficient * dt * lap
+    if mask is not None:
+        new = jnp.where(mask, new, 0.0)
     return dataclasses.replace(grid, concentration=new)
 
 
@@ -539,7 +623,16 @@ def migrate_op(dcfg: DomainConfig) -> Operation:
     """§6.2.1 repartitioning as a pre standalone op."""
 
     def fn(ctx: OpContext, state: DistState) -> DistState:
-        pool, ovf = migrate(dcfg, state.pool)
+        with jax.named_scope("migrate"):
+            pool, ovf = migrate(dcfg, state.pool)
+        # Seal the migrated positions: the frame-rebase arithmetic
+        # (``x ± extent``) is cheap enough for the backend to duplicate
+        # into consumer fusions, where it may re-round differently per
+        # program (serial vs overlapped schedules have different consumer
+        # sets) — a 1-ulp wobble on migrated rows that breaks the
+        # serial↔overlap bit-exactness contract.  ``seal`` pins every
+        # rematerialized copy to one canonical rounding.
+        pool = pool.replace(position=seal(pool.position))
         return dataclasses.replace(
             state, pool=pool, migrate_overflow=state.migrate_overflow + ovf
         )
@@ -550,16 +643,25 @@ def migrate_op(dcfg: DomainConfig) -> Operation:
 def halo_exchange_op(dcfg: DomainConfig) -> Operation:
     """§6.2.2/§6.2.3 aura exchange as a pre standalone op.  Publishes the
     ghost-extended source arrays on the OpContext for the (replaced)
-    ``env_build`` op; accounts wire bytes and overflow into the state."""
+    ``env_build`` op, writes the halo rows into the state's
+    :class:`GhostFrame` double buffer, and accounts wire bytes and overflow
+    into the state."""
 
     def fn(ctx: OpContext, state: DistState) -> DistState:
-        g_pos, g_rad, g_kind, g_alive, codec, ovf, wire = halo_exchange(
-            dcfg, state.pool, state.codec
-        )
+        with jax.named_scope("halo_exchange"):
+            g_pos, g_rad, g_kind, g_alive, codec, ovf, wire = halo_exchange(
+                dcfg, state.pool, state.codec
+            )
         ctx.extras["halo_sources"] = (g_pos, g_rad, g_kind, g_alive)
+        c = state.pool.capacity
+        ghost = GhostFrame(
+            position=g_pos[c:], radius=g_rad[c:],
+            kind=g_kind[c:], alive=g_alive[c:],
+        )
         return dataclasses.replace(
             state,
             codec=codec,
+            ghost=ghost,
             halo_overflow=state.halo_overflow + ovf,
             halo_payload_bytes=state.halo_payload_bytes + wire["payload_bytes"],
             halo_baseline_bytes=state.halo_baseline_bytes + wire["baseline_bytes"],
@@ -568,15 +670,32 @@ def halo_exchange_op(dcfg: DomainConfig) -> Operation:
     return Operation("halo_exchange", fn, phase="pre")
 
 
-def dist_env_build_op(dcfg: DomainConfig, ecfg: EngineConfig) -> Operation:
+def dist_env_build_op(dcfg: DomainConfig, ecfg: EngineConfig,
+                      from_state_ghost: bool = False) -> Operation:
     """Environment build over the ghost-extended set; queries = local agents
     only.  The halo-extended GridIndex is built once and shared by behaviors,
     forces, and the fused cell-list kernel (DESIGN.md §4); the dense
     (C, 27M) candidate tensor is lazy — with candidate-free behaviors and
-    ``force_impl="fused"`` it is never materialized."""
+    ``force_impl="fused"`` it is never materialized.
+
+    ``from_state_ghost`` (the overlapped schedule): read the halo rows from
+    the state's :class:`GhostFrame` double buffer instead of the exchange
+    op's trace-local ``halo_sources`` — the buffer read is then the only
+    consumer edge of the collective, keeping the interior force pass off
+    its dependency chain.  The reconstructed sources are value-identical:
+    the first C rows are the pool at exchange time (nothing between the
+    exchange and this op touches the pool)."""
 
     def fn(ctx: OpContext, state: DistState) -> DistState:
-        g_pos, g_rad, g_kind, g_alive = ctx.extras["halo_sources"]
+        if from_state_ghost:
+            gf = state.ghost
+            pool = state.pool
+            g_pos = jnp.concatenate([pool.position, gf.position], axis=0)
+            g_rad = jnp.concatenate([pool.radius(), gf.radius], axis=0)
+            g_kind = jnp.concatenate([pool.kind, gf.kind], axis=0)
+            g_alive = jnp.concatenate([pool.alive, gf.alive], axis=0)
+        else:
+            g_pos, g_rad, g_kind, g_alive = ctx.extras["halo_sources"]
         index = build_index_arrays(
             ecfg.spec, g_pos, g_alive, interpret=ecfg.kernel_interpret
         )
@@ -597,6 +716,133 @@ def dist_env_build_op(dcfg: DomainConfig, ecfg: EngineConfig) -> Operation:
         return state
 
     return Operation("env_build", fn, phase="pre")
+
+
+# ---------------------------------------------------------------------------
+# Interior / boundary-shell split (overlapped halo exchange, DESIGN.md §4)
+# ---------------------------------------------------------------------------
+
+
+def _interior_cell_tables(dcfg: DomainConfig, spec: GridSpec):
+    """Static per-decomposed-dim bool tables over cell indices: True where
+    the cell and both its ±1 neighbors along the dim are *ghost-free*.
+
+    A cell can hold ghost rows iff its coordinate range reaches outside the
+    owned band [0, extent) along some decomposed dim (live halo rows always
+    carry at least one decomposed coordinate outside it).  A query row is
+    *interior* iff no cell of its 27-box can hold a ghost — separable per
+    dim, so the 27-box test is the AND of these 1-D tables.  Boundary
+    comparisons lean inclusive (an exactly-face-aligned cell counts as
+    ghost-capable): over-marking only grows the shell, never breaks the
+    no-ghost-reads guarantee."""
+    tables = []
+    for d in range(dcfg.n_decomposed):
+        n = spec.dims[d]
+        box = spec.box_size
+        lo = spec.origin[d]
+        eps = 1e-6 * box
+        ghost_capable = np.zeros((n,), bool)
+        for i in range(n):
+            c_lo = lo + i * box
+            c_hi = lo + (i + 1) * box
+            ghost_capable[i] = (c_lo < eps) or (c_hi > dcfg.extent - eps)
+        ok = np.array([
+            not ghost_capable[max(i - 1, 0): i + 2].any() for i in range(n)
+        ])
+        tables.append(jnp.asarray(ok))
+    return tables
+
+
+def interior_shell_masks(
+    dcfg: DomainConfig, spec: GridSpec, position: Array, alive: Array
+) -> Tuple[Array, Array]:
+    """(interior, shell) row masks over the local pool — an exact partition
+    of the live rows.  Membership comes from the same cell coordinates the
+    grid build bins by, so the interior force pass walks exactly the cells
+    the full pass would have walked for those rows — none of which can hold
+    a ghost row."""
+    coords = cell_coords(spec, position)  # (C, 3) int32, clipped to grid
+    ok = jnp.ones(position.shape[:1], bool)
+    for d, table in enumerate(_interior_cell_tables(dcfg, spec)):
+        ok = ok & table[coords[:, d]]
+    return alive & ok, alive & ~ok
+
+
+def interior_env_build_op(dcfg: DomainConfig, ecfg: EngineConfig) -> Operation:
+    """Local-only environment build for the overlapped schedule (pre op,
+    scheduled *before* ``halo_exchange``): a grid index over the live pool
+    alone — no ghost rows, hence no dependency on the collective — plus the
+    interior/shell row masks.  Published on ``ctx.extras``; the
+    ghost-extended build (op ``env_build``) still provides the step's
+    canonical index / NeighborContext for behaviors, the shell pass, and
+    §5.5 static detection."""
+
+    def fn(ctx: OpContext, state: DistState) -> DistState:
+        pool = state.pool
+        with jax.named_scope("interior_env_build"):
+            index = build_index_arrays(
+                ecfg.spec, pool.position, pool.alive,
+                interpret=ecfg.kernel_interpret,
+            )
+            interior, shell = interior_shell_masks(
+                dcfg, ecfg.spec, pool.position, pool.alive
+            )
+        ctx.extras["interior_index"] = index
+        ctx.extras["interior_neighbors"] = NeighborContext.for_pool(
+            ecfg.spec, index, pool
+        )
+        ctx.extras["interior_mask"] = interior
+        ctx.extras["shell_mask"] = shell
+        return state
+
+    return Operation("interior_env_build", fn, phase="pre")
+
+
+def interior_forces_op(dcfg: DomainConfig, ecfg: EngineConfig) -> Operation:
+    """The interior half of the force op: the same ``mechanical_forces``
+    dispatch (impl/tile/morton knobs included) over the *local-only* index
+    and sources, row-masked to interior rows.  Reads nothing the collective
+    produced, so XLA may schedule the halo exchange concurrently with it.
+    Interior rows' 27-boxes hold no ghost-capable cell, and ghost rows never
+    bin into non-ghost-capable cells, so per kept row the local cell lists
+    match the ghost-extended ones slot for slot — the pass is bit-identical
+    to the full pass restricted to those rows."""
+
+    def fn(ctx: OpContext, state: DistState) -> DistState:
+        ctx.extras["interior_force"] = force_pass(
+            ecfg, ctx, state,
+            index=ctx.extras["interior_index"],
+            neighbors=ctx.extras["interior_neighbors"],
+            row_mask=ctx.extras["interior_mask"],
+            scope="interior_forces",
+        )
+        return state
+
+    return Operation("interior_forces", fn, phase="agent")
+
+
+def shell_forces_op(dcfg: DomainConfig, ecfg: EngineConfig) -> Operation:
+    """The boundary-shell half: the same dispatch over the ghost-extended
+    index/context (``ctx.index`` / ``ctx.neighbors``), row-masked to shell
+    rows, merged with the interior pass and applied as the displacement —
+    ``where(interior, f_int, f_shell)`` selects exactly one pass per row,
+    so the applied force equals the serial schedule's single full pass."""
+
+    def fn(ctx: OpContext, state: DistState) -> DistState:
+        shell_force = force_pass(
+            ecfg, ctx, state,
+            row_mask=ctx.extras["shell_mask"],
+            scope="shell_forces",
+        )
+        force = jnp.where(
+            ctx.extras["interior_mask"][:, None],
+            ctx.extras["interior_force"],
+            shell_force,
+        )
+        pool = apply_force(state.pool, force, ecfg.dt)
+        return dataclasses.replace(state, pool=pool)
+
+    return Operation("shell_forces", fn, phase="agent")
 
 
 def dist_boundary_op(dcfg: DomainConfig, ecfg: EngineConfig) -> Operation:
@@ -626,7 +872,8 @@ def dist_diffusion_op(dcfg: DomainConfig, ecfg: EngineConfig) -> Operation:
             return state
         grids = {
             name: distributed_diffuse(
-                dcfg, g, ecfg.dt * max(ecfg.diffusion_frequency, 1)
+                dcfg, g, ecfg.dt * max(ecfg.diffusion_frequency, 1),
+                boundary=ecfg.boundary,
             )
             for name, g in state.grids.items()
         }
@@ -648,8 +895,24 @@ def distributed_scheduler(dcfg: DomainConfig, ecfg: EngineConfig) -> Scheduler:
     """
     sched = Scheduler.default(ecfg, fold_rng=_dist_fold_rng)
     sched = sched.insert_after("sort", migrate_op(dcfg))
-    sched = sched.insert_after("migrate", halo_exchange_op(dcfg))
-    sched = sched.replace_op("env_build", dist_env_build_op(dcfg, ecfg))
+    overlap = dcfg.overlap_halo and ecfg.force_params is not None
+    if overlap:
+        # Overlapped variant (DESIGN.md §4): the local-only build precedes
+        # the exchange, the force op splits into an interior pass (no ghost
+        # reads — off the collective's dependency chain) and a shell pass
+        # that consumes the GhostFrame double buffer via env_build.  Op
+        # order: sort → migrate → interior_env_build → halo_exchange →
+        # env_build → behaviors → interior_forces → shell_forces → …
+        # Bit-exact vs the serial branch below by construction.
+        sched = sched.insert_after("migrate", interior_env_build_op(dcfg, ecfg))
+        sched = sched.insert_after("interior_env_build", halo_exchange_op(dcfg))
+        sched = sched.replace_op("forces", interior_forces_op(dcfg, ecfg))
+        sched = sched.insert_after("interior_forces", shell_forces_op(dcfg, ecfg))
+    else:
+        sched = sched.insert_after("migrate", halo_exchange_op(dcfg))
+    sched = sched.replace_op(
+        "env_build", dist_env_build_op(dcfg, ecfg, from_state_ghost=overlap)
+    )
     sched = sched.replace_op("boundary", dist_boundary_op(dcfg, ecfg))
     sched = sched.replace_op("diffusion", dist_diffusion_op(dcfg, ecfg))
     return sched
@@ -751,6 +1014,9 @@ def init_dist_state(
         halo_payload_bytes=zeros,
         halo_baseline_bytes=zeros,
         health=jax.tree.map(lambda x: jnp.stack([x] * n_dev), empty_health()),
+        ghost=jax.tree.map(
+            lambda x: jnp.stack([x] * n_dev), GhostFrame.create(dcfg)
+        ),
     )
 
 
@@ -854,3 +1120,108 @@ def make_packing_program(mesh, dcfg: DomainConfig):
 def hlo_sort_count(lowered_text: str) -> int:
     """Count sort ops in lowered (StableHLO) or compiled (HLO) module text."""
     return lowered_text.count("stablehlo.sort") + lowered_text.count(" sort(")
+
+
+def _parse_hlo_entry(text: str):
+    """Entry-computation def-use graph of a compiled HLO module.
+
+    Returns ``(operands, lines)``: per-instruction operand-name sets and the
+    raw instruction lines.  Operand extraction skips a tuple-shaped result
+    TYPE prefix (``name = (f32[...], ...) tuple(...)``) and reads only the
+    first balanced paren group after the opcode — attributes like
+    ``control-predecessors`` / ``sharding`` / ``metadata`` never count as
+    data edges."""
+    import re
+
+    entry_lines: dict = {}
+    cur_is_entry = False
+    for line in text.splitlines():
+        m = re.match(r"^(ENTRY )?%?[\w.\-]+\s*(\(.*\)\s*->.*)?{\s*$", line)
+        if m:
+            cur_is_entry = bool(m.group(1))
+            continue
+        if not cur_is_entry:
+            continue
+        s = line.strip()
+        if s == "}":
+            cur_is_entry = False
+            continue
+        im = re.match(r"^(ROOT )?%?([\w.\-]+) = ", s)
+        if im:
+            entry_lines[im.group(2)] = s
+
+    names = set(entry_lines)
+    operands = {}
+    for n, s in entry_lines.items():
+        rhs = s.split("=", 1)[1].lstrip()
+        if rhs.startswith("("):  # tuple-shaped type prefix
+            depth = 0
+            for j, ch in enumerate(rhs):
+                if ch == "(":
+                    depth += 1
+                elif ch == ")":
+                    depth -= 1
+                    if depth == 0:
+                        break
+            rhs = rhs[j + 1:]
+        i = rhs.find("(")
+        depth = 0
+        j = i
+        for j in range(i, len(rhs)):
+            if rhs[j] == "(":
+                depth += 1
+            elif rhs[j] == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+        toks = set(re.findall(r"%?([\w.\-]+)", rhs[i + 1: j]))
+        operands[n] = (toks & names) - {n}
+    return operands, entry_lines
+
+
+def hlo_overlap_report(compiled_text: str) -> dict:
+    """Compile-only probe of the overlapped halo schedule (DESIGN.md §4).
+
+    Each force pass lowers as a ``conditional`` (the :func:`force_pass`
+    fusion fence) whose HLO metadata carries its scope (``forces`` /
+    ``interior_forces`` / ``shell_forces``).  For every scope this walks the
+    conditional's transitive *data* ancestors in the entry computation and
+    counts ``collective-permute`` instructions, split by whether they carry
+    the ``halo_exchange`` named-scope.  The overlap guarantee is structural:
+    under ``overlap_halo`` the interior pass must have ZERO halo-scoped
+    collective ancestors (XLA is free to run the exchange concurrently with
+    it), while the shell pass — the positive control that the analysis sees
+    dependencies at all — must have at least one.  Under the serial
+    schedule the single ``forces`` pass depends on the exchange."""
+    operands, lines = _parse_hlo_entry(compiled_text)
+
+    def ancestors(seeds):
+        seen, stack = set(), list(seeds)
+        while stack:
+            for o in operands.get(stack.pop(), ()):
+                if o not in seen:
+                    seen.add(o)
+                    stack.append(o)
+        return seen
+
+    report = {
+        "halo_collectives": sum(
+            1 for s in lines.values()
+            if "collective-permute" in s and "halo_exchange" in s
+        ),
+    }
+    for scope in ("forces", "interior_forces", "shell_forces"):
+        seeds = [
+            n for n, s in lines.items()
+            if " conditional(" in s and f"/{scope}/cond" in s
+        ]
+        anc = ancestors(seeds)
+        coll = [n for n in anc if "collective-permute" in lines[n]]
+        report[scope] = {
+            "conditionals": len(seeds),
+            "collective_ancestors": len(coll),
+            "halo_collective_ancestors": len(
+                [n for n in coll if "halo_exchange" in lines[n]]
+            ),
+        }
+    return report

@@ -96,7 +96,15 @@ def pair_force(
     dx: Array, r1: Array, r2: Array, params: ForceParams
 ) -> Array:
     """Force on agent 1 from agent 2.  dx = x1 - x2, shape (..., 3)."""
-    dist = jnp.sqrt(jnp.sum(dx * dx, axis=-1) + 1e-20)
+    # Explicit left-associated squared distance — NOT jnp.sum(dx*dx, -1).
+    # A reduce's accumulation order is implementation-defined and XLA:CPU
+    # picks it per fusion context, so the same pass embedded in two
+    # differently-shaped programs (serial vs overlapped distributed
+    # schedules) can disagree by 1 ulp.  Explicit adds pin the association
+    # in the graph — and match the cell_force kernel's formulation, keeping
+    # dense↔fused parity bit-exact.
+    d2 = dx[..., 0] * dx[..., 0] + dx[..., 1] * dx[..., 1] + dx[..., 2] * dx[..., 2]
+    dist = jnp.sqrt(d2 + 1e-20)
     delta = r1 + r2 - dist
     overlap = delta > 0.0
     rbar = r1 * r2 / jnp.maximum(r1 + r2, 1e-20)
@@ -106,6 +114,26 @@ def pair_force(
     )
     direction = dx / dist[..., None]
     return jnp.where(overlap[..., None], magnitude[..., None] * direction, 0.0)
+
+
+def _tree_sum(f: Array) -> Array:
+    """Fixed-association pairwise sum over axis 1.
+
+    ``jnp.sum``'s accumulation order is implementation-defined per fusion
+    context on XLA:CPU; two differently-shaped programs embedding the same
+    candidate reduction can disagree by 1 ulp — breaking the
+    serial↔overlapped distributed bit-exactness contract.  An explicit
+    balanced add-tree pins the association in the HLO graph itself (strict
+    IEEE adds are never reassociated), at the same O(N·K) cost."""
+    k = f.shape[1]
+    while k > 1:
+        half = k // 2
+        s = f[:, :half] + f[:, half:2 * half]
+        if k % 2:
+            s = jnp.concatenate([s, f[:, 2 * half:]], axis=1)
+        f = s
+        k = (k + 1) // 2
+    return f[:, 0]
 
 
 def forces_from_candidates(
@@ -133,7 +161,7 @@ def forces_from_candidates(
     dx = position[:, None, :] - npos                       # (N, K, 3)
     f = pair_force(dx, radius[:, None], nrad, params)      # (N, K, 3)
     f = jnp.where(cand_mask[:, :, None], f, 0.0)
-    return jnp.sum(f, axis=1)                              # (N, 3)
+    return _tree_sum(f)                                    # (N, 3)
 
 
 def forces_from_candidates_tiled(
@@ -198,8 +226,16 @@ def mechanical_forces(
     morton_block: Optional[int] = None,
     morton_window: Optional[int] = None,
     morton_fallback: bool = True,
+    row_mask: Optional[Array] = None,
 ) -> Array:
     """Net mechanical force per agent, (C, 3).
+
+    ``row_mask``: optional (C,) bool — rows outside the mask get zero force
+    in the output.  Pure *output* masking (the evaluation itself is
+    unchanged, so a masked row's force is bit-identical to the unmasked
+    call's): the overlapped distributed schedule dispatches the same pass
+    twice with complementary interior/shell masks and merges by select,
+    which must reproduce the single full pass bit-for-bit (DESIGN.md §4).
 
     active_capacity: if given, §5.5 work compaction — only agents with
     ``~pool.static`` are evaluated (bounded by this capacity; overflow falls
@@ -251,6 +287,7 @@ def mechanical_forces(
         neighbors = NeighborContext.for_pool(spec, index, pool)
     radius = pool.radius()
     c = pool.capacity
+    out_mask = pool.alive if row_mask is None else pool.alive & row_mask
 
     if neighbors.src_position.shape[0] == c:
         # Single-node: the sources ARE the pool — use its current arrays
@@ -328,7 +365,7 @@ def mechanical_forces(
 
     if active_capacity is None:
         force = dense()
-        return jnp.where(pool.alive[:, None], force, 0.0)
+        return jnp.where(out_mask[:, None], force, 0.0)
 
     # ---- §5.5 static-agent omission via work compaction -------------------
     a = int(active_capacity)
@@ -364,7 +401,7 @@ def mechanical_forces(
     force = jax.lax.cond(
         n_active <= a, compacted_path, lambda _: dense(), operand=None
     )
-    return jnp.where(pool.alive[:, None], force, 0.0)
+    return jnp.where(out_mask[:, None], force, 0.0)
 
 
 def update_static_flags(

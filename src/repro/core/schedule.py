@@ -58,6 +58,7 @@ import jax.numpy as jnp
 
 from . import diffusion as dgrid
 from .behaviors import StepContext
+from .delta import seal
 from .forces import mechanical_forces, update_static_flags_celllist
 from .grid import build_index, sort_agents
 from .neighbors import NeighborContext
@@ -389,6 +390,76 @@ def behaviors_op(config) -> Operation:
     return Operation("behaviors", fn, phase="agent")
 
 
+def force_pass(config, ctx: OpContext, state, *, index=None, neighbors=None,
+               row_mask=None, scope: str = "forces") -> Array:
+    """One ``mechanical_forces`` dispatch with the config's knobs applied.
+
+    The single anchoring point for every force evaluation in either engine:
+    the default ``forces`` op runs it once over the step's index/context;
+    the distributed overlapped schedule runs it twice — an interior pass
+    over a local-only index and a shell pass over the ghost-extended one —
+    with complementary ``row_mask``s (DESIGN.md §4).  ``scope`` names the
+    pass in lowered-HLO op metadata so the overlap benchmark can locate the
+    interior pass and the halo collective in the scheduled module text.
+
+    The dispatch runs inside a ``lax.cond`` on a *runtime* predicate
+    (``any(alive)``) — a **fusion fence**.  XLA compiles a conditional
+    branch as its own computation and fusion never crosses that boundary,
+    so the per-row rounding of the force chain is fixed by the branch body
+    alone, not by whatever program surrounds this pass.  Without the fence
+    the same arithmetic embedded in the serial and overlapped distributed
+    schedules fuses against different neighbor ops, and XLA:CPU's code
+    generator may pick a different (equally IEEE-legal, per-program
+    deterministic) evaluation for a handful of rows — a 1-ulp wobble that
+    breaks the serial↔overlap bit-exactness guarantee.  The predicate must
+    be runtime data (a constant ``True`` would fold and inline the
+    branch); it is also semantically exact: with no live rows every force
+    is zero.  The result still passes through :func:`seal` to pin one
+    rounding on the merge/displacement consumers outside the fence.
+    """
+    with jax.named_scope(scope):
+        pool = state.pool
+        use_index = ctx.index if index is None else index
+        use_neighbors = ctx.neighbors if neighbors is None else neighbors
+
+        def _run(_):
+            return mechanical_forces(
+                config.spec,
+                use_index,
+                pool,
+                config.force_params,
+                active_capacity=config.active_capacity,
+                impl=config.force_impl,
+                neighbors=use_neighbors,
+                fused_fallback=config.fused_overflow_fallback,
+                interpret=config.kernel_interpret,
+                tile=config.force_tile,
+                tile_order=config.tile_order,
+                morton_block=config.morton_block,
+                morton_window=config.morton_window,
+                morton_fallback=config.morton_window_fallback,
+                row_mask=row_mask,
+            )
+
+        def _zero(_):
+            return jnp.zeros((pool.capacity, 3), jnp.float32)
+
+        force = jax.lax.cond(jnp.any(pool.alive), _run, _zero, None)
+        return seal(force)
+
+
+def apply_force(pool, force: Array, dt: float):
+    """Apply ``position += force · dt`` with the product sealed by
+    :func:`seal`.  The fence forbids the backend from contracting the
+    multiply into the add (FMA): serial and overlapped distributed schedules
+    apply the force through differently-shaped expressions, and per-program
+    contraction choices put a 1-ulp wobble on the displacement — breaking
+    the serial↔overlap bit-exactness contract.  With the product rounded
+    separately the update is the same two IEEE ops in every schedule."""
+    disp = seal(force * dt)
+    return pool.replace(position=pool.position + disp)
+
+
 def forces_op(config) -> Operation:
     """Mechanical forces (§4.5.1) + displacement (agent op).  Dispatches
     through the same ``mechanical_forces`` entry in both engines — the
@@ -396,24 +467,8 @@ def forces_op(config) -> Operation:
     ghost-extended halo arrays (§6.2.1)."""
 
     def fn(ctx: OpContext, state):
-        pool = state.pool
-        force = mechanical_forces(
-            config.spec,
-            ctx.index,
-            pool,
-            config.force_params,
-            active_capacity=config.active_capacity,
-            impl=config.force_impl,
-            neighbors=ctx.neighbors,
-            fused_fallback=config.fused_overflow_fallback,
-            interpret=config.kernel_interpret,
-            tile=config.force_tile,
-            tile_order=config.tile_order,
-            morton_block=config.morton_block,
-            morton_window=config.morton_window,
-            morton_fallback=config.morton_window_fallback,
-        )
-        pool = pool.replace(position=pool.position + force * config.dt)
+        force = force_pass(config, ctx, state)
+        pool = apply_force(state.pool, force, config.dt)
         return dataclasses.replace(state, pool=pool)
 
     return Operation("forces", fn, phase="agent")

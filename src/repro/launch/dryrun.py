@@ -356,7 +356,8 @@ def lower_teraagent(mesh):
     """Dry-run cell for the paper's own workload: the distributed ABM step."""
     from repro.core import EngineConfig, ForceParams, brownian_motion
     from repro.core.distributed import (
-        DistState, DomainConfig, HaloCodecState, make_distributed_step,
+        DistState, DomainConfig, GhostFrame, HaloCodecState,
+        make_distributed_step,
     )
     from repro.core.agents import AgentPool
 
@@ -417,6 +418,12 @@ def lower_teraagent(mesh):
             cell_overflow_steps=sds((n_dev,), jnp.int32),
             nonfinite_agents=sds((n_dev,), jnp.int32),
             nonfinite_steps=sds((n_dev,), jnp.int32),
+        ),
+        ghost=GhostFrame(
+            position=sds((n_dev, 2 * len(axes) * halo_cap, 3), jnp.float32),
+            radius=sds((n_dev, 2 * len(axes) * halo_cap), jnp.float32),
+            kind=sds((n_dev, 2 * len(axes) * halo_cap), jnp.int32),
+            alive=sds((n_dev, 2 * len(axes) * halo_cap), jnp.bool_),
         ),
     )
     from jax.sharding import NamedSharding, PartitionSpec as P

@@ -153,7 +153,7 @@ def grow_dist_state(state, new_capacity: int, new_dcfg):
     import jax
     import jax.numpy as jnp
 
-    from repro.core.distributed import HaloCodecState
+    from repro.core.distributed import GhostFrame, HaloCodecState
     from repro.core.schedule import empty_health
 
     n_dev = state.pool.position.shape[0]
@@ -172,6 +172,9 @@ def grow_dist_state(state, new_capacity: int, new_dcfg):
         migrate_overflow=zeros,
         halo_overflow=zeros,
         health=stack(empty_health()),
+        # The aura double buffer sizes with halo_capacity; a zeroed frame is
+        # safe — every step's exchange rewrites it before any op reads it.
+        ghost=stack(GhostFrame.create(new_dcfg)),
     )
 
 

@@ -785,6 +785,251 @@ def scenario_elastic_regrow():
           f"final pop={int(np.asarray(o1['pop'])[-1])})")
 
 
+def _overlap_setup(halo_capacity=96):
+    """2×2 mesh with clusters straddling device faces and corners: real
+    ghosts, real migration traffic — the overlap schedule's hardest diet."""
+    extent, space = 16.0, 32.0
+    mesh = _mesh((2, 2), ("data", "model"))
+    dcfg = DomainConfig(
+        mesh_axes=("data", "model"),
+        axis_sizes=(2, 2),
+        extent=extent,
+        halo_width=2.0,
+        halo_capacity=halo_capacity,
+        migrate_capacity=48,
+        depth=space,
+        halo_codec="int16",
+    )
+    spec = dcfg.grid_spec(box_size=2.0, max_per_cell=32)
+    ecfg = EngineConfig(
+        spec=spec, behaviors=(), force_params=ForceParams(), dt=0.05,
+        min_bound=0.0, max_bound=space, boundary="open", sort_frequency=4,
+    )
+    rng = np.random.default_rng(21)
+    pos = rng.uniform(1.0, space - 1.0, (300, 3))
+    # Dense blobs on the device faces and the 4-corner junction: every step
+    # exchanges ghosts and pushes agents across boundaries (migration).
+    blobs = [
+        rng.uniform([15.0, 1.0, 4.0], [17.0, 31.0, 12.0], (40, 3)),
+        rng.uniform([1.0, 15.0, 4.0], [31.0, 17.0, 12.0], (40, 3)),
+        rng.uniform([15.2, 15.2, 4.0], [16.8, 16.8, 12.0], (20, 3)),
+    ]
+    pos = np.concatenate([pos] + blobs).astype(np.float32)
+    return mesh, dcfg, ecfg, pos, pos.shape[0]
+
+
+def _run_pair(mesh, dcfg, ecfg, pos, n_steps, capacity=256):
+    """Run serial vs overlapped schedules from one initial state; return
+    both final DistStates."""
+    state0 = init_dist_state(dcfg, capacity=capacity, positions=pos,
+                             diameter=1.6)
+    finals = {}
+    for name, d in (
+        ("serial", dcfg),
+        ("overlap", dataclasses.replace(dcfg, overlap_halo=True)),
+    ):
+        step = make_distributed_step(mesh, d, ecfg)
+        s = state0
+        for _ in range(n_steps):
+            s = step(s)
+        finals[name] = s
+    return finals["serial"], finals["overlap"]
+
+
+def _assert_states_equal(a, b, label):
+    leaves_a, treedef_a = jax.tree.flatten(a)
+    leaves_b, treedef_b = jax.tree.flatten(b)
+    assert treedef_a == treedef_b, label
+    paths = jax.tree_util.tree_flatten_with_path(a)[0]
+    for (path, x), y in zip(paths, leaves_b):
+        assert np.array_equal(np.asarray(x), np.asarray(y)), (
+            f"{label}: {jax.tree_util.keystr(path)} diverged"
+        )
+
+
+def scenario_overlap_parity():
+    """ISSUE 10 tentpole guard: the overlapped schedule (interior force
+    concurrent with the halo collective, shell force after) must be
+    BIT-EXACT against the serial schedule — full DistState, every variant:
+    dense, fused + morton tiling, and a halo-overflow run where both
+    schedules must drop the same ghosts."""
+    # (a) dense path, steady ghost + migration traffic.
+    mesh, dcfg, ecfg, pos, n = _overlap_setup()
+    n_steps = 12
+    serial, overlap = _run_pair(mesh, dcfg, ecfg, pos, n_steps)
+    assert int(np.asarray(serial.pool.alive).sum()) == n
+    _assert_states_equal(serial, overlap, "dense")
+    print("overlap dense bit-exact OK")
+
+    # (b) fused cell-list path with Z-order window tiles: the interior pass
+    # runs pool-only sources (morton window engages), the shell pass runs
+    # ghost-extended sources (linear order) — still bit-exact vs serial.
+    ecfg_m = dataclasses.replace(
+        ecfg, force_impl="fused", tile_order="morton")
+    serial_m, overlap_m = _run_pair(mesh, dcfg, ecfg_m, pos, n_steps)
+    _assert_states_equal(serial_m, overlap_m, "fused+morton")
+    print("overlap fused+morton bit-exact OK")
+
+    # (c) undersized halo capacity: the exchange truncates — serial and
+    # overlapped schedules must truncate identically (overflow counters
+    # fire, trajectories stay bit-exact).
+    mesh, dcfg_s, ecfg, pos, n = _overlap_setup(halo_capacity=8)
+    serial_o, overlap_o = _run_pair(mesh, dcfg_s, ecfg, pos, 6)
+    assert int(np.asarray(serial_o.halo_overflow).sum()) > 0, \
+        "overflow variant never overflowed — weaken halo_capacity further"
+    _assert_states_equal(serial_o, overlap_o, "halo-overflow")
+    print("overlap halo-overflow bit-exact OK")
+
+    # Schedule shape: interior force is anchored before the exchange's
+    # consumer, shell force after.
+    from repro.core.distributed import distributed_scheduler
+
+    names = [
+        op.name
+        for op in distributed_scheduler(
+            dataclasses.replace(dcfg, overlap_halo=True), ecfg
+        ).ordered_ops()
+    ]
+    assert names.index("migrate") < names.index("interior_env_build") \
+        < names.index("halo_exchange") < names.index("env_build"), names
+    assert names.index("interior_forces") < names.index("shell_forces"), names
+    assert "forces" not in names, names
+    print(f"overlap op sequence: {names}")
+    print("overlap parity OK")
+
+
+def scenario_overlap_smoke8():
+    """CI smoke tier: serial vs overlapped on the full 8-device (4×2) mesh,
+    asserting trajectory hash equality."""
+    import hashlib
+
+    mesh, dcfg, ecfg, pos, n = _force_only_setup("int16")
+    n_steps = 10
+    serial, overlap = _run_pair(mesh, dcfg, ecfg, pos, n_steps, capacity=192)
+
+    def digest(state):
+        h = hashlib.sha256()
+        for leaf in jax.tree.leaves(state):
+            h.update(np.asarray(leaf).tobytes())
+        return h.hexdigest()
+
+    hs, ho = digest(serial), digest(overlap)
+    print(f"serial  state hash: {hs}")
+    print(f"overlap state hash: {ho}")
+    assert hs == ho, "overlapped schedule diverged from serial on 8 devices"
+    assert int(np.asarray(serial.pool.alive).sum()) == n
+    print("overlap smoke8 OK")
+
+
+def scenario_diffusion_edge_parity():
+    """ISSUE 10 satellite: distributed_diffuse used to torus-wrap the
+    decomposed faces unconditionally.  With a non-toroidal boundary the
+    wrap is now masked at mesh-edge devices, so a distributed diffusion run
+    must reproduce the single-node zero-outside field — including the
+    domain edges, where the old wrap leaked mass from the opposite face."""
+    from repro.core import Simulation
+
+    space, res = 32.0, 16
+    mesh = _mesh((2, 2), ("data", "model"))
+    dcfg = DomainConfig(
+        mesh_axes=("data", "model"), axis_sizes=(2, 2), extent=space / 2,
+        halo_width=2.0, halo_capacity=32, migrate_capacity=16, depth=space,
+    )
+    rng = np.random.default_rng(4)
+    field = rng.uniform(0.0, 1.0, (res, res, res)).astype(np.float32)
+    pos = rng.uniform(4.0, space - 4.0, (8, 3)).astype(np.float32)
+    n_steps = 10
+
+    def build(boundary):
+        return (
+            Simulation(space=(0.0, space), cell_size=2.0, boundary=boundary,
+                       dt=0.05, max_per_cell=32, capacity=16)
+            .add_agents(position=pos, diameter=1.6)
+            .add_substance("s", diffusion=1.0, resolution=res,
+                           concentration=field)
+        )
+
+    single, _ = build("open").run_jit(n_steps)
+    ref = np.asarray(single.grids["s"].concentration)
+
+    def reassemble(stacked):
+        out = np.zeros((res, res, res), np.float32)
+        h = res // 2
+        for dev in range(4):
+            cx, cy = divmod(dev, 2)
+            out[cx * h:(cx + 1) * h, cy * h:(cy + 1) * h] = stacked[dev]
+        return out
+
+    dist_state, _ = build("open").distribute(mesh, dcfg).run(n_steps)
+    got = reassemble(np.asarray(dist_state.grids["s"].concentration))
+    err = np.abs(got - ref).max()
+    print(f"open-boundary max |dist - single| = {err:.2e}")
+    np.testing.assert_allclose(got, ref, rtol=0.0, atol=1e-6)
+
+    # Positive control: a toroidal distributed run DOES wrap, so its edge
+    # voxels must differ from the zero-outside reference (proves the mask
+    # above is load-bearing, not vacuous).
+    tor_state, _ = build("toroidal").distribute(mesh, dcfg).run(n_steps)
+    tor = reassemble(np.asarray(tor_state.grids["s"].concentration))
+    edge_delta = np.abs(tor[0] - ref[0]).max()
+    assert edge_delta > 1e-4, (
+        f"toroidal control indistinguishable from open ({edge_delta:.2e}) — "
+        "the edge-parity assertion is not exercising the wrap path"
+    )
+    print(f"toroidal control edge delta = {edge_delta:.2e}")
+    print("diffusion edge parity OK")
+
+
+def scenario_diffusion_uneven_parity():
+    """ISSUE 10 satellite: uneven substance resolution (33 on a 2×2 mesh)
+    distributes via ghost-voxel padding; the reassembled valid voxels must
+    match the single-node field after real diffusion steps."""
+    from repro.core import Simulation
+
+    space, res = 32.0, 33
+    mesh = _mesh((2, 2), ("data", "model"))
+    dcfg = DomainConfig(
+        mesh_axes=("data", "model"), axis_sizes=(2, 2), extent=space / 2,
+        halo_width=2.0, halo_capacity=32, migrate_capacity=16, depth=space,
+    )
+    rng = np.random.default_rng(5)
+    field = rng.uniform(0.0, 1.0, (res, res, res)).astype(np.float32)
+    pos = rng.uniform(4.0, space - 4.0, (8, 3)).astype(np.float32)
+    n_steps = 10
+
+    def build():
+        return (
+            Simulation(space=(0.0, space), cell_size=2.0, boundary="open",
+                       dt=0.05, max_per_cell=32, capacity=16)
+            .add_agents(position=pos, diameter=1.6)
+            .add_substance("s", diffusion=1.0, resolution=res,
+                           concentration=field)
+        )
+
+    single, _ = build().run_jit(n_steps)
+    ref = np.asarray(single.grids["s"].concentration)
+
+    dist_state, _ = build().distribute(mesh, dcfg).run(n_steps)
+    stacked = np.asarray(dist_state.grids["s"].concentration)  # (4,17,17,33)
+    n_valid = np.asarray(dist_state.grids["s"].n_valid)        # (4,3)
+    per = -(-res // 2)
+    got = np.zeros((res, res, res), np.float32)
+    for dev in range(4):
+        cx, cy = divmod(dev, 2)
+        nv = n_valid[dev]
+        lo = (cx * per, cy * per, 0)
+        block = stacked[dev][: nv[0], : nv[1], : nv[2]]
+        got[lo[0]:lo[0] + nv[0], lo[1]:lo[1] + nv[1], lo[2]:lo[2] + nv[2]] \
+            = block
+        # Padding must stay pinned at zero through the steps.
+        assert (stacked[dev][nv[0]:] == 0).all(), dev
+        assert (stacked[dev][:, nv[1]:] == 0).all(), dev
+    err = np.abs(got - ref).max()
+    print(f"uneven split max |dist - single| after {n_steps} steps = {err:.2e}")
+    np.testing.assert_allclose(got, ref, rtol=0.0, atol=1e-6)
+    print("diffusion uneven parity OK")
+
+
 if __name__ == "__main__":
     which = sys.argv[1] if len(sys.argv) > 1 else "all"
     table = {
@@ -806,6 +1051,10 @@ if __name__ == "__main__":
         "health_cell_overflow": scenario_health_cell_overflow,
         "facade_resume": scenario_facade_resume,
         "elastic_regrow": scenario_elastic_regrow,
+        "overlap_parity": scenario_overlap_parity,
+        "overlap_smoke8": scenario_overlap_smoke8,
+        "diffusion_edge_parity": scenario_diffusion_edge_parity,
+        "diffusion_uneven_parity": scenario_diffusion_uneven_parity,
     }
     if which == "all":
         for name, fn in table.items():

@@ -354,24 +354,89 @@ def test_simulation_run_unjitted_matches_jit():
     )
 
 
-def test_distribute_uneven_substance_resolution_raises():
-    """ROADMAP limitation, now under regression: distributed substances
-    require the resolution to divide the mesh evenly; `distribute` must
-    fail fast (before any device work — mesh untouched, so no multi-device
-    runtime is needed here) and name the offending dims."""
+def _uneven_dcfg():
     from repro.core.distributed import DomainConfig
 
-    dcfg = DomainConfig(
+    return DomainConfig(
         mesh_axes=("data", "model"), axis_sizes=(2, 2), extent=SPACE / 2,
         halo_width=6.0, halo_capacity=32, migrate_capacity=16,
         depth=SPACE,
     )
+
+
+def test_distribute_uneven_substance_resolution_pads():
+    """Uneven substance splits no longer raise (former ROADMAP limitation):
+    `_split_grids` pads every device to a uniform ceil(R/S) frame and the
+    valid blocks reassemble the single-node field exactly, with padding
+    masked by `n_valid` and the lattice misalignment carried in
+    `frame_shift`.  (Step-level diffusion parity on real fake devices lives
+    in tests/dist_scenarios.py `diffusion_uneven_parity`.)"""
+    dcfg = _uneven_dcfg()
+    rng = np.random.default_rng(7)
+    field = rng.uniform(0.0, 1.0, (33, 33, 33)).astype(np.float32)
     sim = (
         Simulation(space=(0.0, SPACE), cell_size=6.0)
         .add_agents(position=_positions(16), diameter=4.0)
-        .add_substance("oxygen", diffusion=1.0, resolution=33)  # 33 % 2 != 0
+        .add_substance("oxygen", diffusion=1.0, resolution=33,
+                       concentration=field)  # 33 % 2 != 0 → padded split
     )
-    with pytest.raises(ValueError, match=r"'oxygen'.*dims \[0, 1\]") as ei:
-        sim.distribute(mesh=None, dcfg=dcfg)
-    # Both offending dims spelled out, with the failing division.
-    assert "33 % 2 != 0" in str(ei.value)
+    stacked = sim._split_grids(dcfg)["oxygen"]
+    # Uniform SPMD frames: ceil(33/2) = 17 on both decomposed dims.
+    assert stacked.concentration.shape == (4, 17, 17, 33)
+
+    spacing = SPACE / 33
+    reassembled = np.zeros_like(field)
+    for dev in range(4):
+        cx, cy = divmod(dev, 2)
+        n_valid = np.asarray(stacked.n_valid[dev])
+        shift = np.asarray(stacked.frame_shift[dev])
+        lo = [cx * 17, cy * 17, 0]
+        # frame_shift = lo·spacing − device_origin (lattice misalignment).
+        for d, c in enumerate((cx, cy, 0)):
+            np.testing.assert_allclose(
+                shift[d], lo[d] * spacing - c * dcfg.extent, rtol=1e-6)
+        block = np.asarray(stacked.concentration[dev])
+        # Padding beyond n_valid is zero; valid voxels land in place.
+        assert (block[n_valid[0]:] == 0).all()
+        assert (block[:, n_valid[1]:] == 0).all()
+        valid = block[: n_valid[0], : n_valid[1], : n_valid[2]]
+        reassembled[
+            lo[0] : lo[0] + n_valid[0],
+            lo[1] : lo[1] + n_valid[1],
+            lo[2] : lo[2] + n_valid[2],
+        ] = valid
+    np.testing.assert_array_equal(reassembled, field)
+
+    # Even splits stay byte-identical to the pre-padding behavior: no
+    # metadata attached, plain blocks.
+    sim_even = (
+        Simulation(space=(0.0, SPACE), cell_size=6.0)
+        .add_agents(position=_positions(16), diameter=4.0)
+        .add_substance("oxygen", diffusion=1.0, resolution=32)
+    )
+    even = sim_even._split_grids(dcfg)["oxygen"]
+    assert even.n_valid is None and even.frame_shift is None
+    assert even.concentration.shape == (4, 16, 16, 32)
+
+
+def test_distribute_substance_resolution_smaller_than_mesh_raises():
+    """The clear error survives only for the genuinely impossible case: a
+    resolution smaller than the mesh leaves some device with zero voxels."""
+    dcfg = _uneven_dcfg()
+    sim = (
+        Simulation(space=(0.0, SPACE), cell_size=6.0)
+        .add_agents(position=_positions(16), diameter=4.0)
+        .add_substance("thin", diffusion=1.0, resolution=1)  # 1 < 2 devices
+    )
+    with pytest.raises(ValueError, match=r"'thin'.*smaller than the mesh"):
+        sim._split_grids(dcfg)
+
+    # Toroidal + uneven also stays an error: the padded face would break
+    # the periodic wrap alignment.
+    sim_t = (
+        Simulation(space=(0.0, SPACE), cell_size=6.0, boundary="toroidal")
+        .add_agents(position=_positions(16), diameter=4.0)
+        .add_substance("oxygen", diffusion=1.0, resolution=33)
+    )
+    with pytest.raises(ValueError, match=r"'oxygen'.*toroidal"):
+        sim_t._split_grids(dcfg)

@@ -157,6 +157,41 @@ def test_elastic_regrowth_distributed():
 
 
 @pytest.mark.subprocess
+@pytest.mark.slow
+def test_overlap_schedule_bit_exact():
+    """ISSUE 10 tentpole: the overlapped halo schedule (interior forces
+    concurrent with the collective, boundary-shell forces after) is
+    bit-exact vs the serial schedule — dense, fused+morton, and a
+    halo-overflow run."""
+    out = _run("overlap_parity")
+    assert "overlap parity OK" in out
+
+
+@pytest.mark.subprocess
+def test_overlap_smoke_8_devices():
+    """Serial vs overlapped state-hash equality on the full 8-device mesh
+    (the same check scripts/ci.sh runs as its overlap tier)."""
+    out = _run("overlap_smoke8")
+    assert "overlap smoke8 OK" in out
+
+
+@pytest.mark.subprocess
+def test_distributed_diffusion_edge_parity():
+    """ISSUE 10 bugfix: non-toroidal boundaries must not torus-wrap the
+    decomposed faces of distributed diffusion."""
+    out = _run("diffusion_edge_parity")
+    assert "diffusion edge parity OK" in out
+
+
+@pytest.mark.subprocess
+def test_distributed_diffusion_uneven_resolution():
+    """ISSUE 10 bugfix: uneven substance splits run via ghost-voxel padding
+    and match the single-node field."""
+    out = _run("diffusion_uneven_parity")
+    assert "diffusion uneven parity OK" in out
+
+
+@pytest.mark.subprocess
 def test_distributed_honors_engine_bounds():
     """Regression: the distributed step ignored EngineConfig.min_bound/
     max_bound/boundary for non-decomposed dims (hardcoded closed [0, depth])."""
@@ -206,3 +241,57 @@ def test_free_slot_table_matches_sort_reference():
         got = np.asarray(free_slot_table(jnp.asarray(alive)))
         ref = np.sort(np.where(~alive, np.arange(c), c))
         np.testing.assert_array_equal(got, ref)
+
+
+def test_interior_shell_masks_partition_live_cells():
+    """ISSUE 10: interior/shell membership from cell coordinates must
+    PARTITION the live rows exactly — disjoint, union == alive, dead rows
+    in neither — with interior conservatively clear of the decomposed
+    faces (any live row within one cell of a face is shell) and rows deep
+    inside the owned band interior."""
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core.distributed import DomainConfig, interior_shell_masks
+
+    extent, box = 16.0, 2.0
+    dcfg = DomainConfig(
+        mesh_axes=("data", "model"), axis_sizes=(2, 2), extent=extent,
+        halo_width=2.0, halo_capacity=32, migrate_capacity=16, depth=32.0,
+    )
+    spec = dcfg.grid_spec(box_size=box, max_per_cell=32)
+
+    rng = np.random.default_rng(6)
+    n = 512
+    # Spread over the halo-extended band: owned [0, 16) plus ghost margins
+    # (coords < 0 and ≥ extent model halo rows and migrate leftovers).
+    pos = rng.uniform(-2.0, extent + 2.0, (n, 3)).astype(np.float32)
+    pos[:, 2] = rng.uniform(0.0, 32.0, n)  # z is not decomposed
+    alive = rng.random(n) < 0.8
+
+    interior, shell = interior_shell_masks(
+        dcfg, spec, jnp.asarray(pos), jnp.asarray(alive))
+    interior, shell = np.asarray(interior), np.asarray(shell)
+
+    assert not (interior & shell).any(), "masks overlap"
+    np.testing.assert_array_equal(interior | shell, alive)
+    assert not (interior & ~alive).any() and not (shell & ~alive).any()
+
+    # Necessary: interior rows sit at least one full cell from both faces
+    # of every decomposed dim (x and y here; z unconstrained).
+    for d in range(dcfg.n_decomposed):
+        c = pos[interior, d]
+        assert (c >= box).all() and (c <= extent - box).all(), d
+    # Sufficient (conservative): rows ≥ 2 cells clear of every decomposed
+    # face are interior.
+    deep = alive.copy()
+    for d in range(dcfg.n_decomposed):
+        deep &= (pos[:, d] >= 2 * box) & (pos[:, d] < extent - 2 * box)
+    assert deep.any(), "test layout produced no deep-interior rows"
+    assert interior[deep].all(), "deep-interior live rows not marked interior"
+    # Ghost-band rows (outside the owned band) are never interior.
+    outside = alive & (
+        (pos[:, : dcfg.n_decomposed] < 0).any(axis=1)
+        | (pos[:, : dcfg.n_decomposed] >= extent).any(axis=1)
+    )
+    assert shell[outside].all(), "ghost-band rows leaked into interior"

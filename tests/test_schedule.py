@@ -72,11 +72,18 @@ def test_force_free_config_omits_force_ops():
 
 
 def _frozen_reference_step(config, state):
-    """The pre-scheduler inline simulation_step, frozen verbatim as the
-    semantic reference the schedule must keep reproducing bit-for-bit
+    """The pre-scheduler inline simulation_step, frozen as the semantic
+    reference the schedule must keep reproducing bit-for-bit
     (simulation_step itself now delegates to the scheduler, so comparing
-    against it would be tautological)."""
+    against it would be tautological).  One post-freeze amendment: the
+    force pass adopts the scheduler's rounding contract — the ``lax.cond``
+    fusion fence plus ``seal`` on the force and on the ``force·dt``
+    product (see ``schedule.force_pass``/``apply_force``).  The fence is
+    semantically a no-op but rounding-visible (it fixes which of several
+    IEEE-legal evaluations XLA picks), so a reference without it would pin
+    the *old* rounding, not the old semantics."""
     from repro.core.behaviors import StepContext
+    from repro.core.delta import seal
     from repro.core.engine import SimulationState
     from repro.core.forces import mechanical_forces, update_static_flags_celllist
     from repro.core.grid import build_index, sort_agents
@@ -102,13 +109,20 @@ def _frozen_reference_step(config, state):
     for behavior in config.behaviors:
         ctx, pool = behavior(ctx, pool)
     if config.force_params is not None:
-        force = mechanical_forces(
-            config.spec, index, pool, config.force_params,
-            active_capacity=config.active_capacity, impl=config.force_impl,
-            neighbors=neighbors, fused_fallback=config.fused_overflow_fallback,
-            interpret=config.kernel_interpret, tile=config.force_tile,
-        )
-        pool = pool.replace(position=pool.position + force * config.dt)
+        def _run(_):
+            return mechanical_forces(
+                config.spec, index, pool, config.force_params,
+                active_capacity=config.active_capacity, impl=config.force_impl,
+                neighbors=neighbors,
+                fused_fallback=config.fused_overflow_fallback,
+                interpret=config.kernel_interpret, tile=config.force_tile,
+            )
+
+        def _zero(_):
+            return jnp.zeros((pool.capacity, 3), jnp.float32)
+
+        force = seal(jax.lax.cond(jnp.any(pool.alive), _run, _zero, None))
+        pool = pool.replace(position=pool.position + seal(force * config.dt))
     pool = pool.replace(position=apply_boundary(config, pool.position))
     if config.force_params is not None:
         displacement = pool.position - pre_behavior_pos
